@@ -1,0 +1,51 @@
+"""Paper Tables 1/2/9 KV-size columns + Fig 6 component breakdown."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import metrics
+from repro.core.policy import named_policy
+
+# (policy, paper n_b, paper table value) for the GSM8k-CoT shape (Table 9 Ave.)
+TABLE9 = [
+    ("per_token_q4", 64, 0.342), ("kcvt4", 20, 0.271), ("kivi4", 64, 0.342),
+    ("gear_l_kcvt4", 20, 0.290), ("gear_kcvt4", 20, 0.310),
+    ("per_token_q2", 64, 0.217), ("kivi2", 64, 0.217),
+    ("gear_l_kivi2", 64, 0.236), ("gear_kivi2", 64, 0.276),
+]
+
+N, D, HEADS, DH = 1156, 4096, 32, 128  # GSM8k: 900 prefill + 256 generated
+
+
+def run():
+    worst = 0.0
+    for name, nb, paper in TABLE9:
+        pol = dataclasses.replace(named_policy(name), buffer_size=nb)
+        ours = metrics.kv_size_fraction(pol, N, D, num_heads=HEADS, head_dim=DH)
+        gap = abs(ours - paper)
+        worst = max(worst, gap)
+        emit(f"table9_kvsize/{name}", 0.0,
+             f"ours={ours:.3f} paper={paper:.3f} gap={gap:.3f}")
+    emit("table9_kvsize/max_gap", 0.0, f"{worst:.3f}")
+
+    # Fig 6 breakdown for the two recommended configs
+    for name, nb in (("gear_kcvt4", 20), ("gear_kivi2", 64)):
+        pol = dataclasses.replace(named_policy(name), buffer_size=nb)
+        bd = metrics.kv_size_breakdown(pol, N, D, HEADS, DH)
+        tot = bd.total
+        emit(f"fig6_breakdown/{name}", 0.0,
+             f"quant={bd.quant_bytes/tot:.2f} stats={bd.stat_bytes/tot:.2f} "
+             f"buffer={bd.buffer_bytes/tot:.2f} lowrank={bd.lowrank_bytes/tot:.2f} "
+             f"sparse={bd.sparse_bytes/tot:.2f}")
+    # serving-engine (chunked) accounting for comparison
+    for name in ("gear_kcvt4", "gear_kivi2"):
+        pol = named_policy(name)
+        ours = metrics.kv_size_fraction(pol, N, D, HEADS, DH, per_chunk_lowrank=True)
+        emit(f"kvsize_chunked_engine/{name}", 0.0, f"fraction={ours:.3f}")
+    return worst
+
+
+if __name__ == "__main__":
+    run()

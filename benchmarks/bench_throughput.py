@@ -1,0 +1,108 @@
+"""Paper Fig 3a (time breakdown) + Fig 3c (throughput).
+
+Wall-clock GPU throughput is not reproducible on CPU, so this bench reports
+BOTH:
+  (1) the roofline-model predicted decode throughput — decode on a V100 is
+      HBM-bandwidth-bound, so tokens/s ≈ batch / ((weights + batch·KV)/BW);
+      GEAR's gain comes from the larger feasible batch at equal memory —
+      exactly the mechanism behind the paper's 2.1×–5.07×;
+  (2) measured CPU-relative step times for the compression components
+      (Fig 3a): quantization / low-rank / sparse vs model forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, kv_like, timeit
+from benchmarks.bench_memory import kv_bytes_per_seq, max_batch, N_IN, N_GEN, GB
+from repro.configs import get_config, smoke_config
+from repro.core import gear, lowrank, outlier, quant
+from repro.core.policy import FP16, named_policy
+from repro.models.model import build_model
+from repro.serving.engine import Engine, EngineConfig
+
+V100_BW = 900e9  # bytes/s
+
+
+def predicted_throughput(policy, cfg, batch):
+    weights = cfg.param_count() * 1.0          # 8-bit
+    step_bytes = weights + batch * kv_bytes_per_seq(policy, cfg, N_IN + N_GEN)
+    return batch / (step_bytes / V100_BW)
+
+
+def fig3c(cfg):
+    pol2 = named_policy("gear_kivi2")
+    out = {}
+    for name, pol in (("fp16", FP16), ("gear2", pol2)):
+        b = max_batch(pol, cfg)
+        tps = predicted_throughput(pol, cfg, b)
+        out[name] = (b, tps)
+        emit(f"fig3c_throughput/{name}", 0.0,
+             f"max_batch={b} predicted_tok_per_s={tps:.0f}")
+    ratio = out["gear2"][1] / out["fp16"][1]
+    emit("fig3c_throughput/ratio", 0.0, f"{ratio:.2f}x paper=2.1-5.07x")
+    return ratio
+
+
+def fig3a_breakdown(key):
+    """Component timings of one compression event (CPU-relative)."""
+    x = kv_like(key, (1, 8, 64, 128))
+    pol = named_policy("gear_kivi2")
+    scheme, group = pol.scheme_for("k")
+    t_quant = timeit(lambda: quant.dequantize(quant.quantize(x, 2, scheme, group)))
+    t_low = timeit(lambda: lowrank.power_iteration(x, 4, 4))
+    t_sparse = timeit(lambda: outlier.filter_outliers(x, 0.02, "token"))
+    # model forward step for scale (small model decode)
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    eng = Engine(m, params, EngineConfig(
+        batch=1, capacity=96, policy=dataclasses.replace(pol, buffer_size=16, group=16)))
+    batch = {"tokens": jnp.zeros((1, 24), jnp.int32)}
+    _, caches = eng.prefill(batch)
+    tok = {"tokens": jnp.zeros((1, 1), jnp.int32)}
+    t_fwd = timeit(lambda: eng.decode(tok, eng.init_caches(), 24))
+    total = t_quant + t_low + t_sparse + t_fwd
+    for name, t in (("quant", t_quant), ("lowrank", t_low), ("sparse", t_sparse),
+                    ("forward_other", t_fwd)):
+        emit(f"fig3a_breakdown/{name}", t, f"{100*t/total:.1f}%")
+    return {"quant": t_quant, "lowrank": t_low, "sparse": t_sparse, "fwd": t_fwd}
+
+
+def cpu_relative_decode(key):
+    """Measured CPU decode step: fp16 vs GEAR caches (relative only)."""
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 24), 0, cfg.vocab_size)}
+    times = {}
+    for name, pol in (("fp16", FP16),
+                      ("gear4", dataclasses.replace(named_policy("gear_kcvt4"),
+                                                    buffer_size=16))):
+        eng = Engine(m, params, EngineConfig(batch=2, capacity=96, policy=pol))
+        _, caches = eng.prefill(batch)
+        tok = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+        eng.decode(tok, caches, 24)  # compile
+        _, caches = eng.prefill(batch)
+        times[name] = timeit(lambda c=caches: eng._decode(eng.params, tok, c, 24),
+                             iters=1, warmup=0)
+        emit(f"cpu_decode_us/{name}", times[name], "CPU-relative only")
+    return times
+
+
+def run(key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cfg = get_config("llama2-7b")
+    ratio = fig3c(cfg)
+    assert 1.5 < ratio < 8.0, ratio
+    fig3a_breakdown(key)
+    cpu_relative_decode(key)
+    return ratio
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: realistic KV tensors, timing, CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def kv_like(key, shape=(1, 8, 1024, 128), outlier_p=0.005, outlier_scale=8.0,
+            corr_rank=16):
+    """Heavy-tailed token-correlated tensors mimicking real KV statistics:
+    per-channel structure (a few large-magnitude channels, as observed by
+    KIVI/KVQuant) + shared low-rank token structure + outliers."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    *lead, n, d = shape
+    base = jax.random.normal(k1, shape)
+    u = jax.random.normal(k2, tuple(lead) + (n, corr_rank))
+    v = jax.random.normal(k3, tuple(lead) + (corr_rank, d))
+    chan_scale = 1.0 + 4.0 * jax.random.bernoulli(k4, 0.03, tuple(lead) + (1, d))
+    x = (base + 1.2 * u @ v / corr_rank**0.5) * chan_scale
+    mask = jax.random.bernoulli(k5, outlier_p, shape)
+    return x * (1 + outlier_scale * mask)
+
+
+def timeit(fn, *args, iters=3, warmup=1) -> float:
+    """Median wall time in microseconds (CPU; relative numbers only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

@@ -1,0 +1,56 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json")))
+    if not files:
+        raise FileNotFoundError(f"no dry-run records in {DRYRUN_DIR}")
+    out = []
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        if "roofline" in rec:
+            out.append(rec)
+    return out
+
+
+def markdown_table(records: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['bottleneck']} | {rl['flops_eff']:.2f} | "
+            f"{rl['roofline_frac']:.3f} |")
+    return hdr + "\n".join(rows)
+
+
+def run(emit_csv: bool = False, mesh: str = "16x16"):
+    records = load_records(mesh)
+    if emit_csv:
+        for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+            rl = r["roofline"]
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"bottleneck={rl['bottleneck']} "
+                 f"compute={rl['compute_s']:.3e}s memory={rl['memory_s']:.3e}s "
+                 f"coll={rl['collective_s']:.3e}s frac={rl['roofline_frac']:.3f}")
+    return records
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  python -m benchmarks.run            # all benches
+  python -m benchmarks.run --quick    # skip the trained-model drift bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    from benchmarks import bench_error, bench_kvsize, bench_memory, \
+        bench_throughput, bench_ablation, bench_adaptive, bench_state_quant
+    bench_error.run()
+    bench_kvsize.run()
+    bench_memory.run()
+    bench_throughput.run()
+    bench_ablation.run()
+    bench_adaptive.run()
+    bench_state_quant.run()
+    if not args.quick:
+        from benchmarks import bench_drift
+        bench_drift.run()
+
+    # roofline summary from dry-run artifacts, if present
+    try:
+        from benchmarks import roofline_report
+        roofline_report.run(emit_csv=True)
+    except FileNotFoundError:
+        print("roofline_report,0.0,skipped (run repro.launch.dryrun first)")
+
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

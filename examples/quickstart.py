@@ -1,0 +1,33 @@
+"""Quickstart: compress a KV matrix with GEAR and inspect the error/size.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (approx_error, compress_matrix, decompress_matrix,
+                        kv_size_fraction, named_policy)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # a KV-like tensor: [heads, tokens, head_dim] with a few outliers
+    x = jax.random.normal(key, (8, 1024, 128))
+    x = x * (1 + 6 * jax.random.bernoulli(key, 0.01, x.shape))
+
+    for name in ("kivi2", "gear_l_kivi2", "gear_kivi2", "gear_kcvt4"):
+        pol = named_policy(name)
+        err = float(approx_error(x, pol, "k"))
+        frac = kv_size_fraction(pol, 1024, 128, num_heads=1, head_dim=128)
+        print(f"{name:14s} rel_error={err:.4f}  size={100*frac:.1f}% of FP16")
+
+    # round-trip one matrix through the full GEAR decomposition
+    cm = compress_matrix(x, named_policy("gear_kcvt4"), "k")
+    xh = decompress_matrix(cm)
+    print("\nGEAR 4-bit reconstruction:",
+          f"max_abs_err={float(jnp.abs(x - xh).max()):.3f},",
+          f"bytes={cm.size_bytes()} vs fp16 {x.size * 2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Config registry: ``get_config("gemma3-12b")`` and reduced smoke variants."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+
+_MODULES = {
+    "gemma3-12b": "gemma3_12b",
+    "minicpm-2b": "minicpm_2b",
+    "gemma-2b": "gemma_2b",
+    "starcoder2-3b": "starcoder2_3b",
+    "paligemma-3b": "paligemma_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "musicgen-medium": "musicgen_medium",
+    "hymba-1.5b": "hymba_1p5b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llama2-7b": "llama2_7b",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "llama2-7b")
+ALL_ARCHS = tuple(_MODULES)
+
+# archs for which long_500k runs (sub-quadratic families; see DESIGN.md)
+LONG_CONTEXT_ARCHS = ("gemma3-12b", "hymba-1.5b", "rwkv6-3b")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests (one fwd/train step)."""
+    cfg = get_config(name)
+    unit = len(cfg.layer_pattern)
+    overrides = dict(
+        num_layers=unit * 2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        max_seq_len=512,
+    )
+    if cfg.moe:
+        overrides.update(num_experts=4, moe_top_k=min(cfg.moe_top_k, 2), moe_d_ff=64)
+    if cfg.modality == "vlm":
+        overrides.update(num_prefix_tokens=8)
+    if cfg.rwkv:
+        overrides.update(num_heads=4, num_kv_heads=4)
+    return dataclasses.replace(cfg, **overrides)
+
+
+def shapes_for(name: str) -> tuple[ShapeConfig, ...]:
+    """The assigned input shapes that apply to this arch (skips noted in DESIGN.md)."""
+    cfg = get_config(name)
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if name in LONG_CONTEXT_ARCHS:
+        out.append(SHAPES["long_500k"])
+    return tuple(out)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "ALL_ARCHS",
+    "LONG_CONTEXT_ARCHS", "get_config", "smoke_config", "shapes_for",
+]

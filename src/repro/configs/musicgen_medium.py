@@ -1,0 +1,15 @@
+"""musicgen-medium — decoder-only over EnCodec tokens (4 codebooks, delay
+pattern); frontend is a stub providing frame embeddings. [arXiv:2306.05284; hf]
+
+Adaptation note: the original uses learned positional embeddings and
+LayerNorm; we keep LayerNorm and use RoPE for position (TPU-idiomatic, noted
+in DESIGN.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048,
+    mlp_kind="gelu_mlp", norm="layernorm",
+    modality="audio", num_codebooks=4, tie_embeddings=False,
+)

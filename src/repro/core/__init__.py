@@ -1,0 +1,24 @@
+"""GEAR core: KV-cache compression (quant backbone + low-rank + sparse)."""
+
+from repro.core.policy import CompressionPolicy, FP16, GEAR_DEFAULT, named_policy
+from repro.core.gear import CompressedMatrix, compress_matrix, decompress_matrix, approx_error
+from repro.core.cache import (
+    CacheConfig,
+    GEARLayerCache,
+    FP16LayerCache,
+    WindowLayerCache,
+    init_layer_cache,
+    prefill_layer_cache,
+    append_token,
+    attend,
+    dense_kv,
+)
+from repro.core.metrics import kv_size_breakdown, kv_size_fraction
+
+__all__ = [
+    "CompressionPolicy", "FP16", "GEAR_DEFAULT", "named_policy",
+    "CompressedMatrix", "compress_matrix", "decompress_matrix", "approx_error",
+    "CacheConfig", "GEARLayerCache", "FP16LayerCache", "WindowLayerCache",
+    "init_layer_cache", "prefill_layer_cache", "append_token", "attend", "dense_kv",
+    "kv_size_breakdown", "kv_size_fraction",
+]

@@ -1,0 +1,619 @@
+"""Static-shape GEAR-compressed KV cache with streaming buffer.
+
+This is the serving-engine representation of the paper's Algorithm 1 under
+XLA's static-shape constraint:
+
+* The cache is divided into **chunks** of ``n_b`` tokens (= the streaming
+  buffer size).  Newly decoded tokens land in an FP16 ring buffer; once the
+  buffer holds ``n_b`` tokens it is compressed as one chunk (quant backbone +
+  per-chunk low-rank factors + per-chunk outliers) and written into the
+  packed arrays at its chunk index — a ``lax.cond`` keeps the whole decode
+  step a single XLA program.
+* Prefill compresses ``n // n_b`` chunks in one batched call (leading-dim
+  batching of :func:`repro.core.gear.compress_matrix`), leftover tokens go to
+  the buffer.
+* Attention never materializes the FP16 cache: scores are computed from the
+  packed codes via the identity ``q·K̂ᵀ = (q⊙scale)·codesᵀ + q·zero`` (for
+  per-channel K quant), the low-rank path is evaluated factored
+  (``(q·B_c)·A_cᵀ``, the paper's separate-path trick), and outliers are
+  applied per-chunk.  The Pallas kernel (:mod:`repro.kernels.gear_decode`)
+  fuses the same math; this module is the jnp reference/portable path.
+
+Shapes (H = kv heads, S = capacity, C = S/n_b chunks, r = policy.rank,
+per = 32 // bits packed lanes):
+
+  k_packed  int32 [B, H, S, Dh/per]      v_packed  int32 [B, H, S, Dh/per]
+  k_scale   bf16  [B, H, Ck, Dh]         v_scale   bf16  [B, H, S, Gv]
+  k_zero            (same as k_scale)    v_zero            (same as v_scale)
+  k_a       bf16  [B, H, S, r]           v_a       bf16  [B, H, S, r]
+  k_b       bf16  [B, H, C, Dh, r]       v_b       bf16  [B, H, C, Dh, r]
+  k_sp_val  bf16  [B, H, C, Dh, 2ks]     v_sp_val  bf16  [B, H, S, 2kv]
+  k_sp_idx  int32   (same)               v_sp_idx  int32   (same)
+  buf_k/buf_v bf16 [B, H, n_b, Dh]       length    int32 []
+
+(for the per-token-group baseline backbone K uses the V layout.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gear as gear_lib
+from repro.core import packing
+from repro.core.policy import CompressionPolicy
+
+__all__ = [
+    "CacheConfig",
+    "GEARLayerCache",
+    "FP16LayerCache",
+    "WindowLayerCache",
+    "init_layer_cache",
+    "prefill_layer_cache",
+    "append_token",
+    "attend",
+    "dense_kv",
+]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Static geometry of one attention layer's cache."""
+
+    batch: int
+    kv_heads: int
+    head_dim: int
+    capacity: int            # max tokens (multiple of chunk)
+    policy: CompressionPolicy
+    kind: str = "gear"       # "gear" | "fp16" | "window"
+    window: int = 0          # for kind == "window"
+
+    def __post_init__(self):
+        if self.kind == "gear" and self.capacity % self.chunk:
+            raise ValueError(f"capacity {self.capacity} not a multiple of chunk {self.chunk}")
+
+    @property
+    def chunk(self) -> int:
+        return self.policy.buffer_size
+
+    @property
+    def n_chunks(self) -> int:
+        return self.capacity // self.chunk
+
+    def k_scheme(self):
+        return self.policy.scheme_for("k")
+
+    def v_scheme(self):
+        return self.policy.scheme_for("v")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "k_packed", "k_scale", "k_zero", "v_packed", "v_scale", "v_zero",
+        "k_a", "k_b", "v_a", "v_b",
+        "k_sp_val", "k_sp_idx", "v_sp_val", "v_sp_idx",
+        "buf_k", "buf_v", "length",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class GEARLayerCache:
+    k_packed: Any; k_scale: Any; k_zero: Any
+    v_packed: Any; v_scale: Any; v_zero: Any
+    k_a: Any; k_b: Any; v_a: Any; v_b: Any
+    k_sp_val: Any; k_sp_idx: Any; v_sp_val: Any; v_sp_idx: Any
+    buf_k: Any; buf_v: Any
+    length: Any
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "length"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class FP16LayerCache:
+    k: Any
+    v: Any
+    length: Any
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "pos", "length"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class WindowLayerCache:
+    """Ring buffer of the most recent ``window`` tokens (fp16)."""
+    k: Any
+    v: Any
+    pos: Any      # int32 [window] absolute position held in each slot (-1 empty)
+    length: Any
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers
+
+
+def _k_stat_rows(cfg: CacheConfig) -> tuple[int, int]:
+    scheme, group = cfg.k_scheme()
+    if scheme == "per_channel":
+        g = cfg.chunk if group is None else group
+        return cfg.n_chunks * (cfg.chunk // g), cfg.head_dim
+    g = cfg.head_dim if group is None else group
+    return cfg.capacity, cfg.head_dim // g
+
+
+def _v_stat_rows(cfg: CacheConfig) -> tuple[int, int]:
+    scheme, group = cfg.v_scheme()
+    g = cfg.head_dim if group is None else group
+    return cfg.capacity, cfg.head_dim // g
+
+
+def _sparse_caps(cfg: CacheConfig) -> tuple[int, int]:
+    from repro.core.outlier import outlier_count
+    ks = outlier_count(cfg.chunk, cfg.policy.sparsity)       # K: along tokens in chunk
+    kv = outlier_count(cfg.head_dim, cfg.policy.sparsity)    # V: along channels
+    return ks, kv
+
+
+def init_layer_cache(cfg: CacheConfig, dtype=jnp.bfloat16):
+    B, H, Dh, S = cfg.batch, cfg.kv_heads, cfg.head_dim, cfg.capacity
+    if cfg.kind == "fp16":
+        return FP16LayerCache(
+            k=jnp.zeros((B, H, S, Dh), dtype),
+            v=jnp.zeros((B, H, S, Dh), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+    if cfg.kind == "window":
+        W = cfg.window
+        return WindowLayerCache(
+            k=jnp.zeros((B, H, W, Dh), dtype),
+            v=jnp.zeros((B, H, W, Dh), dtype),
+            pos=jnp.full((W,), -1, jnp.int32),
+            length=jnp.zeros((), jnp.int32),
+        )
+    pol = cfg.policy
+    per = 32 // pol.bits
+    C = cfg.n_chunks
+    r = pol.rank
+    ks, kvo = _sparse_caps(cfg)
+    krows, kcols = _k_stat_rows(cfg)
+    vrows, vcols = _v_stat_rows(cfg)
+    use_lr, use_sp = pol.use_lowrank, pol.use_sparse
+    z = lambda *shape: jnp.zeros(shape, dtype)
+    zi = lambda *shape: jnp.zeros(shape, jnp.int32)
+    k_is_channel = cfg.k_scheme()[0] == "per_channel"
+    return GEARLayerCache(
+        k_packed=zi(B, H, S, Dh // per),
+        k_scale=z(B, H, krows, kcols),
+        k_zero=z(B, H, krows, kcols),
+        v_packed=zi(B, H, S, Dh // per),
+        v_scale=z(B, H, vrows, vcols),
+        v_zero=z(B, H, vrows, vcols),
+        k_a=z(B, H, S, r) if use_lr else None,
+        k_b=z(B, H, C, Dh, r) if use_lr else None,
+        v_a=z(B, H, S, r) if use_lr else None,
+        v_b=z(B, H, C, Dh, r) if use_lr else None,
+        k_sp_val=(z(B, H, C, Dh, 2 * ks) if k_is_channel else z(B, H, S, 2 * kvo)) if use_sp else None,
+        k_sp_idx=(zi(B, H, C, Dh, 2 * ks) if k_is_channel else zi(B, H, S, 2 * kvo)) if use_sp else None,
+        v_sp_val=z(B, H, S, 2 * kvo) if use_sp else None,
+        v_sp_idx=zi(B, H, S, 2 * kvo) if use_sp else None,
+        buf_k=z(B, H, pol.buffer_size, Dh),
+        buf_v=z(B, H, pol.buffer_size, Dh),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compression of chunk batches
+
+
+def _compress_chunks(cfg: CacheConfig, k: jnp.ndarray, v: jnp.ndarray,
+                     rank: int, key: jax.Array):
+    """Compress ``k``/``v`` [B, H, C', nb, Dh] -> dict of per-chunk arrays.
+
+    C' is the number of chunks being compressed in this event (prefill: many,
+    decode: 1).  Low-rank factors are zero-padded to ``policy.rank`` columns.
+    """
+    pol = cfg.policy
+    out = {}
+    for name, x, kind in (("k", k, "k"), ("v", v, "v")):
+        cm = gear_lib.compress_matrix(x, pol, kind, rank=rank, key=key)
+        out[f"{name}_packed"] = cm.qt.packed
+        out[f"{name}_scale"] = cm.qt.scale.astype(jnp.bfloat16)
+        out[f"{name}_zero"] = cm.qt.zero.astype(jnp.bfloat16)
+        if pol.use_lowrank:
+            a, b = cm.a, cm.b
+            pad = pol.rank - rank
+            if pad:
+                a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+                b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+            out[f"{name}_a"], out[f"{name}_b"] = a, b
+        if pol.use_sparse:
+            out[f"{name}_sp_val"] = cm.sparse.values.astype(jnp.bfloat16)
+            out[f"{name}_sp_idx"] = cm.sparse.indices.astype(jnp.int32)
+    return out
+
+
+def _flatten_stat(cfg: CacheConfig, stat: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """[B,H,C',rows_per_chunk,cols] -> [B,H,C'*rows_per_chunk,cols]."""
+    B, H = stat.shape[0], stat.shape[1]
+    return stat.reshape(B, H, -1, stat.shape[-1])
+
+
+def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
+                        key: jax.Array | None = None):
+    """Fill a fresh layer cache from prefill K/V [B, H, n, Dh]."""
+    n = k.shape[2]
+    if cfg.kind == "fp16":
+        return FP16LayerCache(
+            k=jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+            length=jnp.asarray(n, jnp.int32),
+        )
+    if cfg.kind == "window":
+        W = cfg.window
+        # keep the last W tokens
+        take = min(n, W)
+        ks = k[:, :, n - take:, :]
+        vs = v[:, :, n - take:, :]
+        pos_vals = jnp.arange(n - take, n, dtype=jnp.int32)
+        slots = pos_vals % W
+        knew = cache.k.at[:, :, slots, :].set(ks.astype(cache.k.dtype))
+        vnew = cache.v.at[:, :, slots, :].set(vs.astype(cache.v.dtype))
+        pos = cache.pos.at[slots].set(pos_vals)
+        return WindowLayerCache(k=knew, v=vnew, pos=pos, length=jnp.asarray(n, jnp.int32))
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    pol = cfg.policy
+    nb = cfg.chunk
+    n_full = (n // nb) * nb
+    C_new = n_full // nb
+    upd = {f.name: getattr(cache, f.name) for f in dataclasses.fields(GEARLayerCache)}
+    if C_new > 0:
+        B, H, _, Dh = k.shape
+        kc = k[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh)
+        vc = v[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh)
+        comp = _compress_chunks(cfg, kc, vc, pol.rank, key)
+        z4 = (0, 0, 0, 0)
+        upd["k_packed"] = jax.lax.dynamic_update_slice(
+            upd["k_packed"], comp["k_packed"].reshape(B, H, n_full, -1), z4)
+        upd["v_packed"] = jax.lax.dynamic_update_slice(
+            upd["v_packed"], comp["v_packed"].reshape(B, H, n_full, -1), z4)
+        for kv in ("k", "v"):
+            stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
+            stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
+            upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(upd[f"{kv}_scale"], stat_s, z4)
+            upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(upd[f"{kv}_zero"], stat_z, z4)
+            if pol.use_lowrank:
+                a = comp[f"{kv}_a"].reshape(B, H, n_full, pol.rank)
+                upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(upd[f"{kv}_a"], a, z4)
+                upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
+                    upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, 0, 0, 0))
+            if pol.use_sparse:
+                sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
+                if kv == "v" or cfg.k_scheme()[0] != "per_channel":
+                    sv = sv.reshape(B, H, n_full, sv.shape[-1])
+                    si = si.reshape(B, H, n_full, si.shape[-1])
+                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_val"], sv, z4)
+                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_idx"], si, z4)
+                else:
+                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_val"], sv, (0, 0, 0, 0, 0))
+                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_idx"], si, (0, 0, 0, 0, 0))
+    rem = n - n_full
+    if rem:
+        upd["buf_k"] = jax.lax.dynamic_update_slice(
+            upd["buf_k"], k[:, :, n_full:, :].astype(upd["buf_k"].dtype), (0, 0, 0, 0))
+        upd["buf_v"] = jax.lax.dynamic_update_slice(
+            upd["buf_v"], v[:, :, n_full:, :].astype(upd["buf_v"].dtype), (0, 0, 0, 0))
+    upd["length"] = jnp.asarray(n, jnp.int32)
+    return GEARLayerCache(**upd)
+
+
+def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,
+                 key: jax.Array | None = None):
+    """Append one token's K/V [B, H, Dh]; compress the buffer when full."""
+    if cfg.kind == "fp16":
+        idx = cache.length
+        knew = jax.lax.dynamic_update_slice(
+            cache.k, k_t[:, :, None, :].astype(cache.k.dtype), (0, 0, idx, 0))
+        vnew = jax.lax.dynamic_update_slice(
+            cache.v, v_t[:, :, None, :].astype(cache.v.dtype), (0, 0, idx, 0))
+        return FP16LayerCache(k=knew, v=vnew, length=cache.length + 1)
+    if cfg.kind == "window":
+        W = cfg.window
+        slot = cache.length % W
+        knew = jax.lax.dynamic_update_slice(
+            cache.k, k_t[:, :, None, :].astype(cache.k.dtype), (0, 0, slot, 0))
+        vnew = jax.lax.dynamic_update_slice(
+            cache.v, v_t[:, :, None, :].astype(cache.v.dtype), (0, 0, slot, 0))
+        pos = jax.lax.dynamic_update_slice(cache.pos, cache.length[None], (slot,))
+        return WindowLayerCache(k=knew, v=vnew, pos=pos, length=cache.length + 1)
+
+    pol = cfg.policy
+    nb = cfg.chunk
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    buf_pos = cache.length % nb
+    buf_k = jax.lax.dynamic_update_slice(
+        cache.buf_k, k_t[:, :, None, :].astype(cache.buf_k.dtype), (0, 0, buf_pos, 0))
+    buf_v = jax.lax.dynamic_update_slice(
+        cache.buf_v, v_t[:, :, None, :].astype(cache.buf_v.dtype), (0, 0, buf_pos, 0))
+    cache = dataclasses.replace(cache, buf_k=buf_k, buf_v=buf_v, length=cache.length + 1)
+
+    def compress(c):
+        cidx = (c.length - 1) // nb  # chunk index of the buffer just filled
+        B, H, _, Dh = c.buf_k.shape
+        kc = c.buf_k[:, :, None, :, :].astype(jnp.float32)  # [B,H,1,nb,Dh]
+        vc = c.buf_v[:, :, None, :, :].astype(jnp.float32)
+        comp = _compress_chunks(cfg, kc, vc, pol.rank_decode,
+                                jax.random.fold_in(key, c.length))
+        upd = {f.name: getattr(c, f.name) for f in dataclasses.fields(GEARLayerCache)}
+        tok0 = cidx * nb
+        upd["k_packed"] = jax.lax.dynamic_update_slice(
+            upd["k_packed"], comp["k_packed"].reshape(B, H, nb, -1)[:, :, :, :],
+            (0, 0, tok0, 0))
+        upd["v_packed"] = jax.lax.dynamic_update_slice(
+            upd["v_packed"], comp["v_packed"].reshape(B, H, nb, -1), (0, 0, tok0, 0))
+        for kv in ("k", "v"):
+            scheme, group = (cfg.k_scheme() if kv == "k" else cfg.v_scheme())
+            stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
+            stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
+            rows_per_chunk = stat_s.shape[2]
+            upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(
+                upd[f"{kv}_scale"], stat_s, (0, 0, cidx * rows_per_chunk, 0))
+            upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(
+                upd[f"{kv}_zero"], stat_z, (0, 0, cidx * rows_per_chunk, 0))
+            if pol.use_lowrank:
+                a = comp[f"{kv}_a"].reshape(B, H, nb, pol.rank)
+                upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(
+                    upd[f"{kv}_a"], a, (0, 0, tok0, 0))
+                upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
+                    upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, cidx, 0, 0))
+            if pol.use_sparse:
+                sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
+                if kv == "v" or cfg.k_scheme()[0] != "per_channel":
+                    sv = sv.reshape(B, H, nb, sv.shape[-1])
+                    si = si.reshape(B, H, nb, si.shape[-1])
+                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_val"], sv, (0, 0, tok0, 0))
+                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_idx"], si, (0, 0, tok0, 0))
+                else:
+                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_val"], sv, (0, 0, cidx, 0, 0))
+                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
+                        upd[f"{kv}_sp_idx"], si, (0, 0, cidx, 0, 0))
+        return GEARLayerCache(**upd)
+
+    return jax.lax.cond(cache.length % nb == 0, compress, lambda c: c, cache)
+
+
+# ---------------------------------------------------------------------------
+# Attention over the compressed cache
+
+
+def _expand_stat(cfg: CacheConfig, stat: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Expand compact scale/zero rows back to [B, H, S, Dh]."""
+    scheme, group = cfg.k_scheme() if kind == "k" else cfg.v_scheme()
+    B, H = stat.shape[0], stat.shape[1]
+    S, Dh = cfg.capacity, cfg.head_dim
+    if scheme == "per_channel":
+        g = cfg.chunk if group is None else group
+        x = jnp.repeat(stat[:, :, :, None, :], g, axis=3)
+        return x.reshape(B, H, S, Dh)
+    g = Dh if group is None else group
+    x = jnp.repeat(stat[:, :, :, :, None], g, axis=4)
+    return x.reshape(B, H, S, Dh)
+
+
+def _dequant_backbone(cfg: CacheConfig, packed, scale, zero, kind: str,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    codes = packing.unpack(packed, cfg.policy.bits, cfg.head_dim).astype(dtype)
+    s = _expand_stat(cfg, scale.astype(dtype), kind)
+    z = _expand_stat(cfg, zero.astype(dtype), kind)
+    return codes * s + z
+
+
+def _sparse_dense(cfg: CacheConfig, sp_val, sp_idx, kind: str) -> jnp.ndarray:
+    """Densify cached outliers to [B, H, S, Dh] (jnp path only)."""
+    B, H = sp_val.shape[0], sp_val.shape[1]
+    S, Dh, nb, C = cfg.capacity, cfg.head_dim, cfg.chunk, cfg.n_chunks
+    per_channel = kind == "k" and cfg.k_scheme()[0] == "per_channel"
+    if per_channel:
+        # sp_* [B,H,C,Dh,2k]: token index within chunk
+        kk = sp_val.shape[-1]
+        onehot = sp_idx[..., None] == jnp.arange(nb)  # [B,H,C,Dh,2k,nb]
+        dense = jnp.einsum("bhcdk,bhcdkn->bhcnd", sp_val.astype(jnp.float32),
+                           onehot.astype(jnp.float32))
+        return dense.reshape(B, H, S, Dh)
+    # sp_* [B,H,S,2k]: channel index within Dh
+    onehot = sp_idx[..., None] == jnp.arange(Dh)  # [B,H,S,2k,Dh]
+    return jnp.einsum("bhsk,bhskd->bhsd", sp_val.astype(jnp.float32),
+                      onehot.astype(jnp.float32))
+
+
+def _lowrank_dense(cfg: CacheConfig, a, b) -> jnp.ndarray:
+    """Materialize per-chunk A·Bᵀ to [B, H, S, Dh] (test/debug path)."""
+    B, H = a.shape[0], a.shape[1]
+    C, nb, Dh, r = cfg.n_chunks, cfg.chunk, cfg.head_dim, cfg.policy.rank
+    ac = a.reshape(B, H, C, nb, r).astype(jnp.float32)
+    return jnp.einsum("bhcnr,bhcdr->bhcnd", ac, b.astype(jnp.float32)).reshape(B, H, S := cfg.capacity, Dh)
+
+
+def dense_kv(cfg: CacheConfig, cache) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reconstruct dense K̂/V̂ [B, H, S(+buffer), Dh] — reference/debug path.
+
+    Buffer tokens are appended in fp16, so positions < length round-trip.
+    """
+    if cfg.kind == "fp16":
+        return cache.k.astype(jnp.float32), cache.v.astype(jnp.float32)
+    if cfg.kind == "window":
+        return cache.k.astype(jnp.float32), cache.v.astype(jnp.float32)
+    pol = cfg.policy
+    k_hat = _dequant_backbone(cfg, cache.k_packed, cache.k_scale, cache.k_zero, "k")
+    v_hat = _dequant_backbone(cfg, cache.v_packed, cache.v_scale, cache.v_zero, "v")
+    if pol.use_lowrank:
+        k_hat = k_hat + _lowrank_dense(cfg, cache.k_a, cache.k_b)
+        v_hat = v_hat + _lowrank_dense(cfg, cache.v_a, cache.v_b)
+    if pol.use_sparse:
+        k_hat = k_hat + _sparse_dense(cfg, cache.k_sp_val, cache.k_sp_idx, "k")
+        v_hat = v_hat + _sparse_dense(cfg, cache.v_sp_val, cache.v_sp_idx, "v")
+    # overlay buffered (uncompressed) tokens
+    nb = cfg.chunk
+    n_comp = (cache.length // nb) * nb
+    tok = jnp.arange(cfg.capacity)
+    buf_slot = tok - n_comp
+    in_buf = (buf_slot >= 0) & (buf_slot < nb) & (tok < cache.length)
+    bslot = jnp.clip(buf_slot, 0, nb - 1)
+    k_buf = jnp.take(cache.buf_k.astype(jnp.float32), bslot, axis=2)
+    v_buf = jnp.take(cache.buf_v.astype(jnp.float32), bslot, axis=2)
+    mask = in_buf[None, None, :, None]
+    k_hat = jnp.where(mask, k_buf, k_hat)
+    v_hat = jnp.where(mask, v_buf, v_hat)
+    valid = (tok < cache.length)[None, None, :, None]
+    return k_hat * valid, v_hat * valid
+
+
+def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
+           use_factored: bool = True) -> jnp.ndarray:
+    """Decode attention of one query token over the cache.
+
+    q: [B, Hq, Dh] with Hq = G * kv_heads (GQA).  Returns [B, Hq, Dh].
+    ``use_factored`` selects the factored low-rank/sparse score path (the
+    paper's separate forward path); False falls back to dense reconstruction.
+    """
+    B, Hq, Dh = q.shape
+    H = cfg.kv_heads
+    G = Hq // H
+    qf = q.astype(jnp.float32).reshape(B, H, G, Dh)
+
+    if cfg.kind == "window":
+        kf, vf = cache.k.astype(jnp.float32), cache.v.astype(jnp.float32)
+        scores = jnp.einsum("bhgd,bhwd->bhgw", qf, kf) * scale
+        valid = (cache.pos >= 0) & (cache.pos < cache.length)
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgw,bhwd->bhgd", w, vf)
+        return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+    if cfg.kind == "fp16" or not use_factored:
+        kf, vf = dense_kv(cfg, cache)
+        scores = jnp.einsum("bhgd,bhsd->bhgs", qf, kf) * scale
+        valid = jnp.arange(cfg.capacity) < cache.length
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgs,bhsd->bhgd", w, vf)
+        return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+    pol = cfg.policy
+    nb, C, S = cfg.chunk, cfg.n_chunks, cfg.capacity
+    n_comp = (cache.length // nb) * nb
+    n_buf = cache.length - n_comp
+    cdt = jnp.bfloat16  # dequant/compute dtype; accumulations stay f32
+    f32 = jnp.float32
+    qc = qf.astype(cdt)
+
+    # --- scores over the compressed region -------------------------------
+    k_codes = packing.unpack(cache.k_packed, pol.bits, Dh).astype(cdt)
+    if cfg.k_scheme()[0] == "per_channel":
+        g = cfg.chunk if cfg.k_scheme()[1] is None else cfg.k_scheme()[1]
+        rows = S // g
+        sc = cache.k_scale.astype(cdt).reshape(B, H, rows, Dh)
+        zr = cache.k_zero.astype(cdt).reshape(B, H, rows, Dh)
+        # scores = (q ⊙ scale_row)·codes + q·zero_row  per row-group of g tokens
+        q_sc = jnp.einsum("bhgd,bhrd->bhgrd", qc, sc)
+        codes_r = k_codes.reshape(B, H, rows, g, Dh)
+        s_bb = jnp.einsum("bhgrd,bhrnd->bhgrn", q_sc, codes_r,
+                          preferred_element_type=cdt)
+        s_bb = s_bb + jnp.einsum("bhgd,bhrd->bhgr", qc, zr,
+                                 preferred_element_type=cdt)[..., None]
+        s_bb = s_bb.reshape(B, H, G, S)
+    else:
+        k_hat = _dequant_backbone(cfg, cache.k_packed, cache.k_scale,
+                                  cache.k_zero, "k", dtype=cdt)
+        s_bb = jnp.einsum("bhgd,bhsd->bhgs", qc, k_hat, preferred_element_type=cdt)
+
+    if pol.use_lowrank:
+        # factored path: (q·B_c)·A_cᵀ per chunk
+        qb = jnp.einsum("bhgd,bhcdr->bhgcr", qc, cache.k_b.astype(cdt))
+        a_c = cache.k_a.astype(cdt).reshape(B, H, C, nb, pol.rank)
+        s_lr = jnp.einsum("bhgcr,bhcnr->bhgcn", qb, a_c,
+                          preferred_element_type=cdt).reshape(B, H, G, S)
+        s_bb = s_bb + s_lr
+    if pol.use_sparse:
+        if cfg.k_scheme()[0] == "per_channel":
+            # Densify K outliers with a vals-only scatter (index tensor has
+            # no G or Dh-column blowup), then one q·sp_dense dot — §Perf
+            # iterations 3+5.
+            K2 = cache.k_sp_val.shape[-1]
+            rows_k = B * H * C * Dh
+            sp_cdn = jnp.zeros((rows_k, nb), cdt).at[
+                jnp.arange(rows_k, dtype=jnp.int32)[:, None],
+                cache.k_sp_idx.reshape(rows_k, K2)].add(
+                cache.k_sp_val.astype(cdt).reshape(rows_k, K2))
+            sp_cdn = sp_cdn.reshape(B, H, C, Dh, nb)
+            s_sp = jnp.einsum("bhgd,bhcdn->bhgcn", qc, sp_cdn,
+                              preferred_element_type=cdt)
+            s_bb = s_bb + s_sp.reshape(B, H, G, S)
+        else:
+            sp_dense = _sparse_dense(cfg, cache.k_sp_val, cache.k_sp_idx, "k")
+            s_bb = s_bb + jnp.einsum("bhgd,bhsd->bhgs", qf, sp_dense)
+
+    # --- buffer scores -----------------------------------------------------
+    s_buf = jnp.einsum("bhgd,bhnd->bhgn", qc, cache.buf_k.astype(cdt),
+                       preferred_element_type=cdt)
+
+    # --- masks + two-piece online softmax (no concat copy; §Perf iter 5) ----
+    neg = jnp.asarray(-1e30, s_bb.dtype)
+    s_bb = jnp.where((jnp.arange(S) < n_comp)[None, None, None, :], s_bb * scale, neg)
+    s_buf = jnp.where((jnp.arange(nb) < n_buf)[None, None, None, :], s_buf * scale, neg)
+    m_all = jnp.maximum(jnp.max(s_bb, axis=-1), jnp.max(s_buf, axis=-1))[..., None]
+    e_bb = jnp.exp((s_bb - m_all).astype(f32))
+    e_buf = jnp.exp((s_buf - m_all).astype(f32))
+    denom = jnp.sum(e_bb, axis=-1, keepdims=True) + jnp.sum(e_buf, axis=-1, keepdims=True)
+    w_c = e_bb / denom
+    w_buf = e_buf / denom
+
+    # --- weighted values -----------------------------------------------------
+    w_cb = w_c.astype(cdt)
+    v_codes = packing.unpack(cache.v_packed, pol.bits, Dh).astype(cdt)
+    v_sc = _expand_stat(cfg, cache.v_scale.astype(cdt), "v")
+    v_zr = _expand_stat(cfg, cache.v_zero.astype(cdt), "v")
+    v_hat = v_codes * v_sc + v_zr
+    if pol.use_sparse:
+        # densify V outliers with a vals-only scatter (no per-G duplication)
+        # and fold into the backbone dequant — the add fuses into the dot's
+        # operand, so the only extra traffic is the tiny update set
+        # (§Perf iteration 4).
+        K2v = cache.v_sp_val.shape[-1]
+        rows_v = B * H * S
+        sp_dense_v = jnp.zeros((rows_v, Dh), cdt).at[
+            jnp.arange(rows_v, dtype=jnp.int32)[:, None],
+            cache.v_sp_idx.reshape(rows_v, K2v)].add(
+            cache.v_sp_val.astype(cdt).reshape(rows_v, K2v))
+        v_hat = v_hat + sp_dense_v.reshape(B, H, S, Dh)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w_cb, v_hat,
+                     preferred_element_type=f32)
+    if pol.use_lowrank:
+        # factored: (w·A_c)·B_cᵀ per chunk
+        w_chunk = w_cb.reshape(B, H, G, C, nb)
+        wa = jnp.einsum("bhgcn,bhcnr->bhgcr", w_chunk,
+                        cache.v_a.astype(cdt).reshape(B, H, C, nb, pol.rank))
+        out = out + jnp.einsum("bhgcr,bhcdr->bhgd", wa, cache.v_b.astype(cdt),
+                               preferred_element_type=f32)
+    out = out + jnp.einsum("bhgn,bhnd->bhgd", w_buf.astype(cdt),
+                           cache.buf_v.astype(cdt), preferred_element_type=f32)
+    return out.reshape(B, Hq, Dh).astype(q.dtype)

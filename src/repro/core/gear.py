@@ -1,0 +1,117 @@
+"""GEAR composition: X ≈ D̂ + L + S  (paper Section 3, Algorithm 1).
+
+``compress_matrix`` implements one compression event over a tensor
+``[..., n, d]`` (leading dims batch/heads — head-wise decomposition falls out
+of batching).  Order follows Algorithm 1 exactly:
+
+  1. S  = Filter_s(X)                        (outliers, if enabled)
+  2. D̂  = Quant_b(X - S)                    (backbone)
+  3. R  = X - deq(D̂) - S                    (quantization residual)
+  4. L_h = SVDSolver_r(R_h) per head         (low-rank, if enabled)
+
+Note the residual in step 3 uses the *dequantized* backbone — the paper's
+``X − D̂ − S`` is only meaningful in reconstruction space, and reconstruction
+is ``deq(D̂) + L + S``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lowrank as lr
+from repro.core import outlier as ol
+from repro.core import quant as q
+from repro.core.policy import CompressionPolicy
+
+__all__ = ["CompressedMatrix", "compress_matrix", "decompress_matrix", "approx_error"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["qt", "sparse", "a", "b"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class CompressedMatrix:
+    """GEAR-compressed stand-in for a [..., n, d] tensor.
+
+    qt     : quantized backbone (always present)
+    sparse : SparseOutliers or None
+    a, b   : low-rank factors [..., n, r] / [..., d, r] or None
+    """
+
+    qt: q.QuantizedTensor
+    sparse: ol.SparseOutliers | None
+    a: jnp.ndarray | None
+    b: jnp.ndarray | None
+
+    def size_bytes(self) -> int:
+        total = self.qt.size_bytes()
+        if self.sparse is not None:
+            total += self.sparse.size_bytes()
+        if self.a is not None:
+            total += self.a.size * 2 + self.b.size * 2
+        return total
+
+
+def compress_matrix(
+    x: jnp.ndarray,
+    policy: CompressionPolicy,
+    kind: str,
+    rank: int | None = None,
+    key: jax.Array | None = None,
+) -> CompressedMatrix:
+    """Compress ``x`` [..., n, d] as the ``kind`` ('k' or 'v') cache tensor.
+
+    ``rank`` overrides ``policy.rank`` (the engine passes ``rank_decode`` for
+    streaming-buffer chunks).  Leading dims are treated as independent
+    matrices, giving the paper's batch-wise/head-wise decomposition.
+    """
+    if policy.is_fp16:
+        raise ValueError("fp16 policy has no compressed representation")
+    scheme, group = policy.scheme_for(kind)
+    axis = "token" if scheme == "per_channel" else "channel"
+
+    sparse = None
+    remainder = x
+    if policy.use_sparse:
+        sparse, remainder = ol.filter_outliers(x, policy.sparsity, axis)
+
+    qt = q.quantize(remainder, policy.bits, scheme, group,
+                    stat_dtype=jnp.dtype(policy.stat_dtype))
+
+    a = b = None
+    if policy.use_lowrank:
+        r = policy.rank if rank is None else rank
+        resid = x.astype(jnp.float32) - q.dequantize(qt)
+        if sparse is not None:
+            resid = resid - ol.densify(sparse)
+        a, b = lr.power_iteration(resid, r, policy.power_iters, key)
+        a = a.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
+    return CompressedMatrix(qt=qt, sparse=sparse, a=a, b=b)
+
+
+def decompress_matrix(cm: CompressedMatrix, dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct deq(D̂) + L + S."""
+    xh = q.dequantize(cm.qt)
+    if cm.a is not None:
+        xh = xh + lr.apply_lowrank(cm.a, cm.b)
+    if cm.sparse is not None:
+        xh = xh + ol.densify(cm.sparse)
+    return xh.astype(dtype)
+
+
+def approx_error(x: jnp.ndarray, policy: CompressionPolicy, kind: str = "k",
+                 rank: int | None = None) -> jnp.ndarray:
+    """Relative Frobenius approximation error of a policy on ``x``."""
+    if policy.is_fp16:
+        return jnp.zeros(())
+    cm = compress_matrix(x, policy, kind, rank)
+    xh = decompress_matrix(cm)
+    xf = x.astype(jnp.float32)
+    return jnp.linalg.norm(xf - xh) / jnp.maximum(jnp.linalg.norm(xf), 1e-8)

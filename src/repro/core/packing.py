@@ -1,0 +1,59 @@
+"""Bit-packing of low-precision integer codes into int32 carrier lanes.
+
+TPU VMEM and the MXU operate natively on 32-bit lanes; packing 2/4/8-bit
+quantization codes into int32 keeps loads dense (16/8/4 codes per lane) and
+lets the Pallas kernels unpack with vectorized shifts+masks.  The same
+layout is used by the pure-jnp reference path so the packed cache pytree is
+identical regardless of which backend consumes it.
+
+Layout: the **last axis** is packed.  For bit-width ``b`` and last-axis size
+``D`` (must be divisible by ``32 // b``), codes ``x[..., i]`` with
+``i = lane * per + j`` are stored in bits ``[j*b, (j+1)*b)`` of
+``packed[..., lane]`` where ``per = 32 // b``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["codes_per_lane", "packed_width", "pack", "unpack"]
+
+
+def codes_per_lane(bits: int) -> int:
+    if bits not in (2, 4, 8):
+        raise ValueError(f"unsupported bit-width {bits}; expected 2, 4 or 8")
+    return 32 // bits
+
+
+def packed_width(d: int, bits: int) -> int:
+    per = codes_per_lane(bits)
+    if d % per != 0:
+        raise ValueError(f"last axis {d} not divisible by {per} ({bits}-bit)")
+    return d // per
+
+
+def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned integer codes in [0, 2**bits) along the last axis.
+
+    codes: int32 array [..., D]  ->  int32 array [..., D // (32//bits)].
+    """
+    per = codes_per_lane(bits)
+    d = codes.shape[-1]
+    lanes = packed_width(d, bits)
+    x = codes.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    x = x.reshape(codes.shape[:-1] + (lanes, per))
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[(None,) * (x.ndim - 1)]
+    packed = jnp.sum(x << shifts, axis=-1, dtype=jnp.uint32)
+    return packed.astype(jnp.int32)
+
+
+def unpack(packed: jnp.ndarray, bits: int, d: int | None = None) -> jnp.ndarray:
+    """Inverse of :func:`pack`.  Returns int32 codes [..., D]."""
+    per = codes_per_lane(bits)
+    lanes = packed.shape[-1]
+    d_out = lanes * per if d is None else d
+    x = packed.astype(jnp.uint32)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[(None,) * x.ndim]
+    codes = (x[..., None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    codes = codes.reshape(packed.shape[:-1] + (lanes * per,))
+    return codes[..., :d_out].astype(jnp.int32)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the GEAR hot path (validated via interpret=True).
+
+gear_decode   — fused dequant + sparse-scatter + low-rank + online-softmax
+                decode attention over the compressed cache (the paper's
+                fused CUDA dequant-GEMM, TPU-native).
+quant_pack    — fused per-channel quantize + int32 bit-pack (compression step).
+flash_prefill — blocked causal/window/prefix attention for prefill.
+ops           — jit'd dispatch wrappers (kernel on TPU, jnp oracle elsewhere).
+ref           — pure-jnp oracles defining each kernel's contract.
+"""
+from repro.kernels.ops import gear_attend, flash_attention, quantize_chunk, on_tpu

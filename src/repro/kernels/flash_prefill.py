@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: blocked causal/windowed/prefix flash attention (prefill).
+
+Classic FlashAttention-2 schedule on the TPU memory hierarchy: grid
+(BH, q_blocks, kv_blocks) with the KV dimension innermost; running max /
+sum-exp / accumulator live in VMEM scratch, one [Bq, Dh] tile is written to
+HBM per q block.  Supports the mask family the assigned archs need: causal,
+sliding window (gemma3 locals), and bidirectional prefix (paligemma).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_prefill"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, nk: int, scale: float, window: int,
+            prefix_len: int, softcap: float):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # [bq, Dh]
+    k = k_ref[0].astype(jnp.float32)              # [bk, Dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = qp >= kp
+    if window:
+        ok &= qp - kp < window
+    if prefix_len:
+        ok |= (qp < prefix_len) & (kp < prefix_len)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr[:, None] + jnp.sum(p, axis=-1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "window", "prefix_len", "softcap", "interpret"),
+)
+def flash_prefill(q, k, v, *, bq: int = 128, bk: int = 128, window: int = 0,
+                  prefix_len: int = 0, softcap: float = 0.0,
+                  interpret: bool = False):
+    """q,k,v: [BH, S, Dh] -> [BH, S, Dh] causal attention."""
+    BH, S, Dh = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, nk=nk, scale=Dh**-0.5, window=window,
+        prefix_len=prefix_len, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda x, i, j: (x, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda x, i, j: (x, j, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda x, i, j: (x, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda x, i, j: (x, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,107 @@
+"""Jit'd wrappers dispatching Pallas kernels (TPU) or jnp oracles (CPU/GPU).
+
+``gear_attend`` is the drop-in high-performance replacement for
+:func:`repro.core.cache.attend`: the compressed region goes through the
+fused ``gear_decode`` kernel (or its oracle off-TPU), the FP16 streaming
+buffer is merged with one softmax-rescale, matching the paper's streaming
+design where only compressed history pays the dequantization path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import CacheConfig
+from repro.kernels import ref as ref_ops
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.gear_decode import gear_decode
+from repro.kernels.quant_pack import quant_pack
+
+__all__ = ["on_tpu", "gear_attend", "flash_attention", "quantize_chunk"]
+
+NEG_INF = -1e30
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flat(x, bh):
+    return None if x is None else x.reshape((bh,) + x.shape[2:])
+
+
+def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
+                force_kernel: bool = False, interpret: bool = False) -> jnp.ndarray:
+    """Decode attention over a GEAR layer cache via the fused kernel path.
+
+    q: [B, Hq, Dh] -> [B, Hq, Dh].  Requires the engine layout
+    (group == chunk for K; see DESIGN.md) which both recommended policies
+    (GEAR-KCVT-4bit, GEAR-KIVI-2bit) satisfy.
+    """
+    pol = cfg.policy
+    B, Hq, Dh = q.shape
+    H = cfg.kv_heads
+    G = Hq // H
+    BH = B * H
+    qf = q.astype(jnp.float32).reshape(BH, G, Dh)
+    nb = cfg.chunk
+    n_comp = (cache.length // nb) * nb
+    n_buf = cache.length - n_comp
+
+    kwargs = dict(bits=pol.bits, chunk=nb, scale_factor=scale)
+    lr = dict(
+        k_a=_flat(cache.k_a, BH), k_b=_flat(cache.k_b, BH),
+        v_a=_flat(cache.v_a, BH), v_b=_flat(cache.v_b, BH),
+    ) if pol.use_lowrank else {}
+    sp = dict(
+        k_sp_val=_flat(cache.k_sp_val, BH), k_sp_idx=_flat(cache.k_sp_idx, BH),
+        v_sp_val=_flat(cache.v_sp_val, BH), v_sp_idx=_flat(cache.v_sp_idx, BH),
+    ) if pol.use_sparse else {}
+    common = (qf, _flat(cache.k_packed, BH), _flat(cache.k_scale, BH),
+              _flat(cache.k_zero, BH), _flat(cache.v_packed, BH),
+              _flat(cache.v_scale, BH), _flat(cache.v_zero, BH), n_comp)
+    if on_tpu() or force_kernel:
+        acc, m, l = gear_decode(*common, interpret=interpret or not on_tpu(),
+                                **kwargs, **lr, **sp)
+        m, l = m[..., 0], l[..., 0]
+    else:
+        acc, m, l = ref_ops.gear_decode_ref(*common, **kwargs, **lr, **sp)
+
+    # merge the fp16 buffer region (n_b tokens, plain XLA)
+    s_buf = jnp.einsum("xgd,xnd->xgn", qf,
+                       _flat(cache.buf_k, BH).astype(jnp.float32)) * scale
+    s_buf = jnp.where((jnp.arange(nb) < n_buf)[None, None, :], s_buf, NEG_INF)
+    m_buf = jnp.max(s_buf, axis=-1)
+    m_tot = jnp.maximum(m, m_buf)
+    p_buf = jnp.exp(s_buf - m_tot[..., None])
+    acc_buf = jnp.einsum("xgn,xnd->xgd", p_buf,
+                         _flat(cache.buf_v, BH).astype(jnp.float32))
+    corr = jnp.exp(m - m_tot)
+    l_tot = l * corr + jnp.sum(p_buf, axis=-1)
+    out = (acc * corr[..., None] + acc_buf) / jnp.maximum(l_tot[..., None], 1e-30)
+    return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, window: int = 0, prefix_len: int = 0,
+                    softcap: float = 0.0, interpret: bool = False):
+    """q,k,v: [BH, S, Dh] causal attention; kernel on TPU, oracle elsewhere."""
+    if on_tpu():
+        return flash_prefill(q, k, v, window=window, prefix_len=prefix_len,
+                             softcap=softcap, interpret=False)
+    if interpret:
+        return flash_prefill(q, k, v, window=window, prefix_len=prefix_len,
+                             softcap=softcap, interpret=True)
+    S = q.shape[1]
+    return ref_ops.flash_prefill_ref(q, k, v, jnp.arange(S), causal=True,
+                                     window=window, prefix_len=prefix_len,
+                                     softcap=softcap)
+
+
+def quantize_chunk(x: jnp.ndarray, bits: int, interpret: bool = False):
+    """Fused per-channel quantize+pack of a chunk batch [N, n, d]."""
+    if on_tpu() or interpret:
+        return quant_pack(x, bits, interpret=interpret or not on_tpu())
+    return ref_ops.quant_pack_ref(x, bits)

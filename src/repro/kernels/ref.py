@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (same contracts, no tiling).
+
+These are the correctness ground truth for the kernel tests and the
+portable fallback used on CPU/GPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = ["quant_pack_ref", "gear_decode_ref", "flash_prefill_ref"]
+
+NEG_INF = -1e30
+
+
+def quant_pack_ref(x: jnp.ndarray, bits: int):
+    """Per-column (channel) asymmetric quantize + pack.
+
+    x: [N, n, d] -> (packed int32 [N, n, d*bits/32], scale [N, d], zero [N, d]).
+    Groups are whole columns (rows reduced) — the KCVT/chunked layout.
+    """
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=1)
+    mx = jnp.max(xf, axis=1)
+    scale = jnp.maximum((mx - mn) / (2**bits - 1), 1e-8)
+    codes = jnp.clip(jnp.round((xf - mn[:, None, :]) / scale[:, None, :]),
+                     0, 2**bits - 1).astype(jnp.int32)
+    return packing.pack(codes, bits), scale, mn
+
+
+def _dequant(packed, scale_full, zero_full, bits, d):
+    codes = packing.unpack(packed, bits, d).astype(jnp.float32)
+    return codes * scale_full + zero_full
+
+
+def gear_decode_ref(
+    q: jnp.ndarray,          # [BH, G, Dh]
+    k_packed: jnp.ndarray,   # [BH, S, L] int32
+    k_scale: jnp.ndarray,    # [BH, C, Dh]
+    k_zero: jnp.ndarray,
+    v_packed: jnp.ndarray,   # [BH, S, L]
+    v_scale: jnp.ndarray,    # [BH, S, Gv]
+    v_zero: jnp.ndarray,
+    n_comp: jnp.ndarray,     # [] int32 — valid compressed tokens
+    *,
+    bits: int,
+    chunk: int,
+    scale_factor: float,
+    k_a=None, k_b=None,      # [BH, S, r] / [BH, C, Dh, r]
+    v_a=None, v_b=None,
+    k_sp_val=None, k_sp_idx=None,   # [BH, C, Dh, Ks]
+    v_sp_val=None, v_sp_idx=None,   # [BH, S, Kv]
+):
+    """Unnormalized online-softmax decode attention over a GEAR cache.
+
+    Returns (acc [BH, G, Dh] f32 exp-weighted V sum, m [BH, G] score max,
+    l [BH, G] sum of exp) so the caller can merge the fp16 buffer region.
+    """
+    BH, S, L = k_packed.shape
+    Dh = k_scale.shape[-1]
+    C = S // chunk
+    f32 = jnp.float32
+
+    sc = jnp.repeat(k_scale.astype(f32), chunk, axis=1)
+    zr = jnp.repeat(k_zero.astype(f32), chunk, axis=1)
+    k_hat = _dequant(k_packed, sc, zr, bits, Dh)                 # [BH, S, Dh]
+    if k_sp_val is not None:
+        oh = (k_sp_idx[..., None] == jnp.arange(chunk)).astype(f32)  # [BH,C,Dh,Ks,nb]
+        k_hat = k_hat + jnp.einsum("xcdk,xcdkn->xcnd", k_sp_val.astype(f32), oh
+                                   ).reshape(BH, S, Dh)
+    s = jnp.einsum("xgd,xsd->xgs", q.astype(f32), k_hat)
+    if k_a is not None:
+        qb = jnp.einsum("xgd,xcdr->xgcr", q.astype(f32), k_b.astype(f32))
+        a_c = k_a.astype(f32).reshape(BH, C, chunk, -1)
+        s = s + jnp.einsum("xgcr,xcnr->xgcn", qb, a_c).reshape(BH, -1, S)
+    s = s * scale_factor
+    valid = jnp.arange(S) < n_comp
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+
+    gv = v_scale.shape[-1]
+    vsc = jnp.repeat(v_scale.astype(f32), Dh // gv, axis=-1)
+    vzr = jnp.repeat(v_zero.astype(f32), Dh // gv, axis=-1)
+    v_hat = _dequant(v_packed, vsc, vzr, bits, Dh)
+    if v_sp_val is not None:
+        oh = (v_sp_idx[..., None] == jnp.arange(Dh)).astype(f32)
+        v_hat = v_hat + jnp.einsum("xsk,xskd->xsd", v_sp_val.astype(f32), oh)
+    acc = jnp.einsum("xgs,xsd->xgd", p, v_hat)
+    if v_a is not None:
+        pa = jnp.einsum("xgcn,xcnr->xgcr", p.reshape(BH, -1, C, chunk),
+                        v_a.astype(f32).reshape(BH, C, chunk, -1))
+        acc = acc + jnp.einsum("xgcr,xcdr->xgd", pa, v_b.astype(f32))
+    return acc, m, l
+
+
+def flash_prefill_ref(q, k, v, positions, *, causal: bool = True,
+                      window: int = 0, prefix_len: int = 0,
+                      softcap: float = 0.0):
+    """Blocked-attention oracle.  q,k,v: [BH, S, Dh] -> [BH, S, Dh]."""
+    f32 = jnp.float32
+    Dh = q.shape[-1]
+    s = jnp.einsum("xqd,xkd->xqk", q.astype(f32), k.astype(f32)) * Dh**-0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp, kp = positions, positions
+    ok = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        ok = qp[:, None] >= kp[None, :]
+    if window:
+        ok = ok & (qp[:, None] - kp[None, :] < window)
+    if prefix_len:
+        ok = ok | ((qp[:, None] < prefix_len) & (kp[None, :] < prefix_len))
+    s = jnp.where(ok[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("xqk,xkd->xqd", w, v.astype(f32)).astype(q.dtype)

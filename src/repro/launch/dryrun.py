@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware: the sharding config is
+coherent (SPMD partitioning succeeds), the program fits per-device HBM
+(memory_analysis), and yields the roofline inputs (cost_analysis + HLO
+collective traffic).  Results land in ``experiments/dryrun/`` as JSON, one
+file per cell, and a printed summary row.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--policy gear_kcvt4]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, ARCHS, SHAPES, get_config, shapes_for
+from repro.configs.base import ShapeConfig
+from repro.core.policy import named_policy
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.perf.hlo_stats import collective_stats, op_histogram
+from repro.perf.jaxpr_cost import trace_cost
+from repro.perf.roofline import model_flops, roofline
+from repro.train.state import RunConfig, init_train_state
+from repro.train.loop import make_train_step, train_state_shardings
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _mem_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes",
+            "peak_memory_in_bytes")
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or k.startswith("utilization"))}
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               policy_name: str = "gear_kcvt4", microbatches: int = 8):
+    """Returns (callable, abstract args, shardings-applied jit fn builder)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    policy = named_policy(policy_name)
+
+    if shape.mode == "train":
+        run = RunConfig(microbatches=microbatches, remat=True, remat_policy="dots",
+                        zero1=True, ckpt_every=0)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(
+                jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), run))
+        st_shard = train_state_shardings(cfg, mesh, state_abs, run)
+        batch_abs = input_specs(cfg, shape)
+        b_shard = shd.shardings_for(mesh, shd.batch_pspecs(cfg, batch_abs, mesh))
+        step = make_train_step(model, mesh, run, st_shard, b_shard)
+        return step, (state_abs, batch_abs)
+    if shape.mode == "prefill":
+        params_abs = model.init_abstract()
+        p_shard = shd.shardings_for(mesh, shd.param_pspecs(cfg, params_abs, mesh))
+        batch_abs = input_specs(cfg, shape)
+        b_shard = shd.shardings_for(mesh, shd.batch_pspecs(cfg, batch_abs, mesh))
+        cap = shape.seq_len
+        cache_abs = jax.eval_shape(
+            lambda: model.init_caches(policy, shape.global_batch, cap))
+        c_shard = shd.shardings_for(
+            mesh, shd.cache_pspecs(cfg, cache_abs, mesh, shape.global_batch))
+        fn = jax.jit(lambda p, b: model.prefill(p, b, policy, cap),
+                     in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, c_shard))
+        return fn, (params_abs, batch_abs)
+    params_abs = model.init_abstract()
+    p_shard = shd.shardings_for(mesh, shd.param_pspecs(cfg, params_abs, mesh))
+    cap = shape.seq_len
+    cache_abs = jax.eval_shape(
+        lambda: model.init_caches(policy, shape.global_batch, cap))
+    c_shard = shd.shardings_for(
+        mesh, shd.cache_pspecs(cfg, cache_abs, mesh, shape.global_batch))
+    batch_abs = input_specs(cfg, shape)
+    b_shard = shd.shardings_for(mesh, shd.batch_pspecs(cfg, batch_abs, mesh))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(
+        lambda p, tok, caches, pos: model.decode_step(p, tok, caches, pos,
+                                                      policy, cap),
+        in_shardings=(p_shard, b_shard, c_shard, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,))
+    return fn, (params_abs, batch_abs, cache_abs, pos_abs)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                policy_name: str = "gear_kcvt4", microbatches: int = 8) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+
+    with mesh:
+        fn, args = build_cell(arch, shape_name, mesh, policy_name, microbatches)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        loop_cost = trace_cost(fn, *args)
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    cost = _cost(compiled)
+    mem = _mem_summary(compiled)
+    mf = model_flops(cfg, shape)
+    # XLA's CPU cost_analysis counts while bodies once; the jaxpr-derived
+    # loop-aware cost is the roofline input (see perf/jaxpr_cost.py).
+    rl = roofline(loop_cost["flops"], loop_cost["bytes"],
+                  coll["total_operand_bytes"], chips, mf)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "policy": policy_name,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_xla_raw": cost, "loop_cost": loop_cost, "memory": mem,
+        "collectives": {k: v for k, v in coll.items() if k != "total_operand_bytes"},
+        "collective_bytes": coll["total_operand_bytes"],
+        "roofline": rl.row(),
+        "op_histogram": op_histogram(hlo),
+    }
+    return record
+
+
+def run_cells(cells, multi_pod: bool, policy: str, out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch, shape_name in cells:
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+        fname = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+        if os.path.exists(fname):
+            with open(fname) as f:
+                rec = json.load(f)
+            results.append(rec)
+            print(f"[skip] {arch} × {shape_name} × {mesh_tag} (cached)")
+            continue
+        try:
+            rec = dryrun_cell(arch, shape_name, multi_pod, policy)
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=1)
+            r = rec["roofline"]
+            print(f"[ok]   {arch} × {shape_name} × {mesh_tag}: "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s → {r['bottleneck']} "
+                  f"(compile {rec['compile_s']}s)")
+            results.append(rec)
+        except Exception as e:
+            print(f"[FAIL] {arch} × {shape_name} × {mesh_tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=6)
+            results.append({"arch": arch, "shape": shape_name, "error": str(e)})
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="gear_kcvt4")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s.name) for a in ARCHS for s in shapes_for(a)]
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else [s.name for s in SHAPES.values()]
+        cells = [(a, s) for a in archs for s in shapes
+                 if any(sc.name == s for sc in shapes_for(a))]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_cells(cells, mp, args.policy, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-derive loop-aware costs + roofline for existing dry-run JSONs by
+re-tracing each cell (no recompile — collective bytes are reused)."""
+
+import glob
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import OUT_DIR, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.perf.jaxpr_cost import trace_cost
+from repro.perf.roofline import model_flops, roofline
+
+
+def main():
+    meshes = {"16x16": make_production_mesh(),
+              "2x16x16": make_production_mesh(multi_pod=True)}
+    cache = {}
+    for path in sorted(glob.glob(os.path.join(os.path.abspath(OUT_DIR), "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "error" in rec:
+            continue
+        key = (rec["arch"], rec["shape"], rec.get("policy", "gear_kcvt4"))
+        if key in cache:
+            lc = cache[key]
+        else:
+            mesh = meshes[rec["mesh"]]
+            with mesh:
+                fn, args = build_cell(rec["arch"], rec["shape"], mesh, key[2])
+                lc = trace_cost(fn, *args)
+            cache[key] = lc
+        cfg = get_config(rec["arch"])
+        mf = model_flops(cfg, SHAPES[rec["shape"]])
+        rl = roofline(lc["flops"], lc["bytes"], rec["collective_bytes"],
+                      rec["chips"], mf)
+        rec["loop_cost"] = lc
+        rec["roofline"] = rl.row()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rl.row()
+        print(f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+              f"x={r['collective_s']:.2e} -> {r['bottleneck']} eff={r['flops_eff']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

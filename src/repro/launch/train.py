@@ -1,0 +1,65 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --steps 50 \
+      --batch 8 --seq 256 [--smoke] [--mesh 2x2] [--powersgd]
+
+On a real TPU slice the mesh comes from the runtime topology
+(``make_production_mesh``); on CPU pass ``--mesh dxm`` with
+XLA_FLAGS=--xla_force_host_platform_device_count set, or omit for one device.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models.model import build_model
+from repro.train.loop import train_loop
+from repro.train.state import RunConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--mesh", default="", help="e.g. 2x2 or 2x2x2 (pod,data,model)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--powersgd", action="store_true")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.mesh:
+        dims = [int(v) for v in args.mesh.split("x")]
+        mesh = make_test_mesh(*dims[-2:], pod=dims[0] if len(dims) == 3 else 0)
+    else:
+        mesh = make_test_mesh(1, 1)
+
+    run = RunConfig(
+        total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
+        microbatches=args.microbatches, remat=True, remat_policy="dots",
+        zero1=not args.no_zero1,
+        grad_compression="powersgd" if args.powersgd else "none",
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=10)
+    dc = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    state = train_loop(model, mesh, run, dc)
+    print(f"done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Multi-head attention: GQA/MQA, RoPE, QK-norm, logit softcap, sliding
+window, prefix-LM; full-sequence (train/prefill) and cached-decode paths.
+
+The full-sequence path chunks queries with ``lax.scan`` so the score matrix
+never exceeds ``[B, H, q_chunk, S]`` — required for the 32k prefill shapes.
+The decode path runs against any :mod:`repro.core.cache` layer cache (GEAR,
+fp16, or sliding-window ring buffer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.models.common import KeyGen, apply_rope, dense_init, rmsnorm
+
+__all__ = ["attn_params", "attention_train", "attention_decode", "rope_theta_for"]
+
+NEG_INF = -1e30
+
+
+def rope_theta_for(cfg: ModelConfig, kind: str) -> float:
+    # gemma3-style dual RoPE: local layers use short-range theta.
+    if kind == "local" and cfg.attn_pattern == "local_global":
+        return 10_000.0
+    return cfg.rope_theta
+
+
+def attn_params(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d, qd, kvd, dh = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    p = {
+        "wq": dense_init(kg(), (d, qd)),
+        "wk": dense_init(kg(), (d, kvd)),
+        "wv": dense_init(kg(), (d, kvd)),
+        "wo": dense_init(kg(), (qd, d), fan_in=qd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x, positions, kind: str):
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, dh)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, dh)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    theta = rope_theta_for(cfg, kind)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, kind: str, window: int, prefix_len: int):
+    """[... , Sq, Sk] additive-mask boolean: True = attend."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    ok = causal
+    if kind == "local":
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    if prefix_len:
+        both_prefix = (q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len)
+        ok = ok | both_prefix
+    return ok
+
+
+def _sdpa_chunked(cfg: ModelConfig, q, k, v, positions, kind: str,
+                  prefix_len: int, q_chunk: int):
+    """q: [B,S,Hq,Dh]; k,v: [B,S,Hkv,Dh] -> [B,S,Hq,Dh].  Scans q chunks."""
+    B, S, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = Dh ** -0.5
+    cap = cfg.attn_logit_softcap
+    kT = jnp.moveaxis(k, 1, 2)  # [B,Hkv,S,Dh]
+    vT = jnp.moveaxis(v, 1, 2)
+    k_pos = positions
+
+    def block(q_blk, pos_blk):
+        # q_blk: [B, qc, Hq, Dh].  Scores/probs materialize bf16 (MXU
+        # accumulates f32 internally); softmax internals run f32 fused —
+        # the standard TPU mixed-precision attention layout.
+        qg = jnp.moveaxis(q_blk, 1, 2).reshape(B, Hkv, G, q_blk.shape[1], Dh)
+        s = jnp.einsum("bhgqd,bhsd->bhgqs", qg.astype(jnp.bfloat16),
+                       kT.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.bfloat16) * scale
+        if cap:
+            s = (cap * jnp.tanh(s.astype(jnp.float32) / cap)).astype(jnp.bfloat16)
+        m = _mask(pos_blk, k_pos, kind, cfg.local_window, prefix_len)
+        s = jnp.where(m[None, None, None], s, jnp.bfloat16(NEG_INF))
+        mx = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        ex = jnp.exp((s - mx).astype(jnp.float32))
+        w = (ex / jnp.sum(ex, axis=-1, keepdims=True)).astype(jnp.bfloat16)
+        # bf16 output materialization: the MXU still accumulates f32
+        # internally, and this keeps the transposed (backward) dot's
+        # cotangent bf16 too (§Perf iteration 3).
+        o = jnp.einsum("bhgqs,bhsd->bhgqd", w, vT.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.bfloat16)
+        return jnp.moveaxis(o.reshape(B, Hq, q_blk.shape[1], Dh), 1, 2)
+
+    if S <= q_chunk:
+        return block(q, positions).astype(q.dtype)
+    assert S % q_chunk == 0, (S, q_chunk)
+    nblk = S // q_chunk
+    q_blocks = jnp.moveaxis(q.reshape(B, nblk, q_chunk, Hq, Dh), 1, 0)
+    pos_blocks = positions.reshape(nblk, q_chunk)
+    _, out = jax.lax.scan(lambda c, xs: (c, block(*xs)), None, (q_blocks, pos_blocks))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, Hq, Dh).astype(q.dtype)
+
+
+def attention_train(cfg: ModelConfig, params, x, positions, kind: str = "global",
+                    prefix_len: int = 0, q_chunk: int = 512):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
+
+    k/v are returned [B, Hkv, S, Dh] for optional cache construction.
+    """
+    q, k, v = _project_qkv(cfg, params, x, positions, kind)
+    out = _sdpa_chunked(cfg, q, k, v, positions, kind, prefix_len, q_chunk)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+    return out, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+
+
+def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
+                     kind: str = "global"):
+    """One-token attention against a layer cache.
+
+    x_t: [B, 1, d]; pos: scalar int32 absolute position.
+    Returns (out [B, 1, d], new_cache).
+    """
+    B = x_t.shape[0]
+    q, k, v = _project_qkv(cfg, params, x_t, jnp.asarray(pos)[None], kind)
+    k_t = jnp.squeeze(k, axis=1)  # [B, Hkv, Dh]
+    v_t = jnp.squeeze(v, axis=1)
+    q_t = jnp.squeeze(q, axis=1)  # [B, Hq, Dh]
+    new_cache = cache_lib.append_token(cache_cfg, cache, k_t, v_t)
+    # NOTE: logit softcap is omitted on the cached-decode path (it only
+    # matters for training stability); documented in DESIGN.md.
+    out = cache_lib.attend(cache_cfg, new_cache, q_t, scale=cfg.head_dim ** -0.5)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x_t.dtype)
+    return out, new_cache

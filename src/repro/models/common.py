@@ -1,0 +1,79 @@
+"""Shared model components: norms, activations, RoPE, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm", "layernorm", "apply_norm", "norm_params",
+    "rope_freqs", "apply_rope", "dense_init", "KeyGen",
+]
+
+
+class KeyGen:
+    """Deterministic PRNG key dispenser for parameter init."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+
+def dense_init(key: jax.Array, shape, fan_in: int | None = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (LLM standard)."""
+    if fan_in is None:
+        fan_in = shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def norm_params(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1+scale)
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x: jnp.ndarray, params, kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: [B, S, H, Dh] or [B, S, Dh]; positions: [S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)
+    ang = positions.astype(jnp.float32)[:, None] * freqs   # [S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == 4:  # head axis present
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[None, :, :], sin[None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,125 @@
+"""Chunked linear-recurrence engine shared by the SSM and RWKV6 blocks.
+
+Computes, for per-head state ``S ∈ R^{Dk×Dv}``:
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ · S_t                          (mode="inclusive", Mamba-style)
+    y_t = r_tᵀ · (S_{t-1} + diag(u) k_t v_tᵀ) (mode="bonus", RWKV6 Finch)
+
+in **chunked parallel form**: sequence split into chunks of ``chunk`` tokens;
+within a chunk the contribution is a masked matmul with cumulative-decay
+factors (parallel, MXU-friendly); across chunks a short ``lax.scan`` carries
+the state.  This is the standard GLA/SSD chunking adapted to TPU: O(S·W)
+instead of O(S) sequential steps, O(log) nothing needed.
+
+Numerics: decay factors are handled in log-space.  Intra-chunk ratios
+``exp(cum_t − cum_τ)`` (τ ≤ t) are ≤ 1 and exact; the factored form clamps
+``−cum`` at :data:`CLAMP` so the k-side factor cannot overflow — positions
+whose cumulative decay within one chunk is below e^-30 contribute < 1e-13
+and are uniformly zero in f32 anyway (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_scan", "sequential_scan_ref"]
+
+CLAMP = 30.0
+
+
+def chunked_scan(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    chunk: int = 64,
+    u: jnp.ndarray | None = None,
+    state0: jnp.ndarray | None = None,
+    mode: str = "inclusive",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k: [B,H,S,Dk]; v: [B,H,S,Dv]; log_w: [B,H,S,Dk] (≤0) or broadcastable.
+
+    u: bonus vector [H, Dk] (mode="bonus").  Returns (y [B,H,S,Dv],
+    final state [B,H,Dk,Dv]).
+    """
+    B, H, S, Dk = r.shape
+    Dv = v.shape[-1]
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    C, W = S // chunk, chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, H, C, W, Dk)
+    kc = k.astype(f32).reshape(B, H, C, W, Dk)
+    vc = v.astype(f32).reshape(B, H, C, W, Dv)
+    lw = jnp.broadcast_to(log_w.astype(f32), (B, H, S, Dk)).reshape(B, H, C, W, Dk)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Dk, Dv), f32)
+    else:
+        state0 = state0.astype(f32)
+
+    cum = jnp.cumsum(lw, axis=3)                       # inclusive Π_{u≤t} w_u
+    cum_prev = cum - lw                                # exclusive Π_{u<t} w_u
+    q_cum = cum if mode == "inclusive" else cum_prev   # decay applied to state-read
+    tri = jnp.tril(jnp.ones((W, W), f32), 0 if mode == "inclusive" else -1)
+
+    # factored intra-chunk attention matrix: att[t,τ] = Σ_dk r_t k_τ e^{qcum_t − cum_τ}
+    q_fac = rc * jnp.exp(jnp.maximum(q_cum, -CLAMP))
+    k_fac = kc * jnp.exp(jnp.minimum(-cum, CLAMP))
+    att = jnp.einsum("bhcwk,bhcxk->bhcwx", q_fac, k_fac) * tri
+    y_intra = jnp.einsum("bhcwx,bhcxv->bhcwv", att, vc)
+    if mode == "bonus":
+        bonus = jnp.einsum("bhcwk,hk,bhcwk->bhcw", rc, u.astype(f32), kc)
+        y_intra = y_intra + bonus[..., None] * vc
+
+    # cross-chunk: scan carrying the state
+    decay_last = jnp.exp(jnp.maximum(cum[:, :, :, -1, :], -CLAMP))          # [B,H,C,Dk]
+    k_state = kc * jnp.exp(jnp.maximum(cum[:, :, :, -1:, :] - cum, -CLAMP))  # Π_{τ<u≤W}
+    state_inc = jnp.einsum("bhcwk,bhcwv->bhckv", k_state, vc)               # [B,H,C,Dk,Dv]
+
+    def step(state, xs):
+        qf_c, dlast_c, sinc_c = xs
+        y_cross = jnp.einsum("bhwk,bhkv->bhwv", qf_c, state)
+        state = state * dlast_c[..., None] + sinc_c
+        return state, y_cross
+
+    xs = (
+        jnp.moveaxis(q_fac, 2, 0),
+        jnp.moveaxis(decay_last, 2, 0),
+        jnp.moveaxis(state_inc, 2, 0),
+    )
+    stateT, y_cross = jax.lax.scan(step, state0, xs)
+    y = y_intra + jnp.moveaxis(y_cross, 0, 2)
+    return y.reshape(B, H, S, Dv).astype(v.dtype), stateT
+
+
+def decode_step(r_t, k_t, v_t, log_w_t, state, u=None, mode: str = "inclusive"):
+    """Single-token recurrence (serving).  r_t/k_t: [B,H,Dk]; v_t: [B,H,Dv];
+    state: [B,H,Dk,Dv].  Returns (y_t [B,H,Dv], new state)."""
+    f32 = jnp.float32
+    rf, kf, vf = r_t.astype(f32), k_t.astype(f32), v_t.astype(f32)
+    w = jnp.exp(jnp.broadcast_to(log_w_t.astype(f32), kf.shape))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    if mode == "bonus":
+        read = state + u.astype(f32)[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", rf, read)
+        state = state * w[..., None] + kv
+    else:
+        state = state * w[..., None] + kv
+        y = jnp.einsum("bhk,bhkv->bhv", rf, state)
+    return y.astype(v_t.dtype), state
+
+
+def sequential_scan_ref(r, k, v, log_w, u=None, state0=None, mode="inclusive"):
+    """O(S) sequential oracle for tests."""
+    B, H, S, Dk = r.shape
+    Dv = v.shape[-1]
+    state = jnp.zeros((B, H, Dk, Dv), jnp.float32) if state0 is None else state0.astype(jnp.float32)
+    lw = jnp.broadcast_to(log_w, (B, H, S, Dk))
+    ys = []
+    for t in range(S):
+        y, state = decode_step(r[:, :, t], k[:, :, t], v[:, :, t], lw[:, :, t],
+                               state, u=u, mode=mode)
+        ys.append(y)
+    return jnp.stack(ys, axis=2).astype(v.dtype), state

@@ -1,0 +1,39 @@
+"""Feed-forward variants: SwiGLU (llama), GeGLU (gemma), plain GELU MLP
+(starcoder2/musicgen)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+
+__all__ = ["mlp_params", "mlp_apply"]
+
+
+def mlp_params(cfg: ModelConfig, kg: KeyGen, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(kg(), (d, ff)),
+            "w_up": dense_init(kg(), (d, ff)),
+            "w_down": dense_init(kg(), (ff, d), fan_in=ff),
+        }
+    return {
+        "w_up": dense_init(kg(), (d, ff)),
+        "w_down": dense_init(kg(), (ff, d), fan_in=ff),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"].astype(dt), approximate=True) * (
+            x @ params["w_up"].astype(dt))
+    else:  # gelu_mlp
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt), approximate=True)
+    return h @ params["w_down"].astype(dt)

@@ -1,0 +1,119 @@
+"""Public model facade: init / loss / prefill / decode + input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import CompressionPolicy, GEAR_DEFAULT
+from repro.models import transformer as tfm
+
+__all__ = ["Model", "build_model", "input_specs", "decode_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        return tfm.init_params(self.cfg, key)
+
+    def init_abstract(self) -> Any:
+        return jax.eval_shape(lambda: tfm.init_params(self.cfg, jax.random.PRNGKey(0)))
+
+    # -- training ------------------------------------------------------------
+    def loss_fn(self, params, batch: dict, remat: bool = False,
+                remat_policy: str = "full"):
+        """Next-token cross-entropy.  Returns (loss, metrics)."""
+        cfg = self.cfg
+        logits, aux = tfm.forward(cfg, params, batch, mode="train", remat=remat,
+                                  remat_policy=remat_policy)
+        if cfg.modality == "audio":
+            labels = batch["tokens"][:, 1:, :]                  # [B, S-1, K]
+            lg = logits[:, :-1]                                 # [B, S-1, K, V]
+            ce = _xent(lg, labels)
+        elif cfg.modality == "vlm":
+            p = cfg.num_prefix_tokens
+            labels = batch["tokens"][:, 1:]                     # text tokens only
+            lg = logits[:, p:-1]
+            ce = _xent(lg, labels)
+        else:
+            labels = batch["tokens"][:, 1:]
+            lg = logits[:, :-1]
+            ce = _xent(lg, labels)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch: dict, policy: CompressionPolicy,
+                capacity: int):
+        logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
+                                        policy=policy, capacity=capacity)
+        return logits, caches
+
+    def decode_step(self, params, token_batch: dict, caches, pos,
+                    policy: CompressionPolicy, capacity: int):
+        return tfm.decode_tokens(self.cfg, params, token_batch, caches, pos,
+                                 policy, capacity)
+
+    def init_caches(self, policy: CompressionPolicy, batch: int, capacity: int):
+        return tfm.init_caches(self.cfg, policy, batch, capacity)
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Cross entropy without materializing f32 logits: the max/exp/sum chain
+    runs elementwise-fused over the bf16 logits with f32 accumulation."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    ex = jnp.exp((logits - m).astype(jnp.float32))
+    lse = jnp.log(jnp.sum(ex, axis=-1)) + m[..., 0].astype(jnp.float32)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll.astype(jnp.float32))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell.
+
+    Training/prefill: the token batch.  Decode: one new token (the cache
+    specs come from :func:`decode_state_specs`).  Modality frontends are
+    stubs: VLM gets precomputed SigLIP patch embeddings, audio gets EnCodec
+    codebook token frames.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.mode in ("train", "prefill"):
+        if cfg.modality == "vlm":
+            p = cfg.num_prefix_tokens
+            return {
+                "tokens": sds((B, S - p), i32),
+                "img_embeds": sds((B, p, cfg.d_model), jnp.bfloat16),
+            }
+        if cfg.modality == "audio":
+            return {"tokens": sds((B, S, cfg.num_codebooks), i32)}
+        return {"tokens": sds((B, S), i32)}
+    # decode: one token; the S-length cache is a separate argument
+    if cfg.modality == "audio":
+        return {"tokens": sds((B, 1, cfg.num_codebooks), i32)}
+    return {"tokens": sds((B, 1), i32)}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       policy: CompressionPolicy = GEAR_DEFAULT):
+    """Abstract cache pytree for a decode cell (no allocation)."""
+    capacity = _round_capacity(shape.seq_len, policy)
+    return jax.eval_shape(
+        lambda: tfm.init_caches(cfg, policy, shape.global_batch, capacity))
+
+
+def _round_capacity(seq_len: int, policy: CompressionPolicy) -> int:
+    nb = policy.buffer_size
+    return (seq_len + nb - 1) // nb * nb

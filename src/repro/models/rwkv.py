@@ -1,0 +1,160 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear recurrence, attention-free.
+
+Faithful structure per arXiv:2404.05892: data-dependent token-shift (ddlerp
+with a 5-way LoRA), data-dependent decay ``w_t = exp(-exp(w0 + LoRA(x)))``,
+bonus ``u`` for the current token, per-head GroupNorm on the recurrence
+output, silu-gated output projection, and squared-ReLU channel mix.  The
+recurrence itself runs through the shared chunked engine in "bonus" mode:
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ),   S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+GEAR applicability: none — there is no KV cache (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+from repro.models import linear_scan
+
+__all__ = ["RWKVState", "rwkv_params", "time_mix_apply", "channel_mix_apply",
+           "time_mix_decode", "channel_mix_decode", "init_rwkv_state"]
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["shift_tm", "shift_cm", "wkv"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class RWKVState:
+    shift_tm: jnp.ndarray   # [B, d] previous token input (time mix)
+    shift_cm: jnp.ndarray   # [B, d] previous token input (channel mix)
+    wkv: jnp.ndarray        # [B, H, Dk, Dv] recurrence state
+
+
+def _heads(cfg: ModelConfig):
+    return cfg.num_heads, cfg.head_dim
+
+
+def rwkv_params(cfg: ModelConfig, kg: KeyGen) -> dict:
+    d = cfg.d_model
+    H, dh = _heads(cfg)
+    return {
+        "tm": {
+            "mix_base": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,w,g static mixes
+            "mix_lora_a": dense_init(kg(), (d, 5 * LORA_MIX)),
+            "mix_lora_b": dense_init(kg(), (5, LORA_MIX, d), fan_in=LORA_MIX),
+            "w0": jnp.full((d,), -2.0, jnp.float32),           # decay base (pre -exp(exp))
+            "decay_lora_a": dense_init(kg(), (d, LORA_DECAY)),
+            "decay_lora_b": dense_init(kg(), (LORA_DECAY, d), fan_in=LORA_DECAY),
+            "u": jnp.zeros((H, dh), jnp.float32),              # bonus
+            "wr": dense_init(kg(), (d, d)),
+            "wk": dense_init(kg(), (d, d)),
+            "wv": dense_init(kg(), (d, d)),
+            "wg": dense_init(kg(), (d, d)),
+            "wo": dense_init(kg(), (d, d)),
+            "ln_scale": jnp.ones((d,), jnp.float32),           # per-head groupnorm
+            "ln_bias": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+            "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+            "wk": dense_init(kg(), (d, cfg.d_ff)),
+            "wv": dense_init(kg(), (cfg.d_ff, d), fan_in=cfg.d_ff),
+            "wr": dense_init(kg(), (d, d)),
+        },
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token shift -> the 5 mixed inputs [5, B, S, d]."""
+    dx = x_prev - x
+    base = p["mix_base"].astype(x.dtype)
+    xx = x + dx * base[0][None, None, :]           # coarse mix for the lora input
+    lora = jnp.tanh(xx @ p["mix_lora_a"].astype(x.dtype))
+    lora = lora.reshape(lora.shape[:-1] + (5, LORA_MIX))
+    dyn = jnp.einsum("bsfl,fld->fbsd", lora, p["mix_lora_b"].astype(x.dtype))
+    mixes = base[:, None, None, :] + dyn                          # [5,B,S,d]
+    return x[None] + dx[None] * mixes
+
+
+def _group_norm_heads(x, scale, bias, H, eps=64e-5):
+    """Per-head LayerNorm (RWKV's GroupNorm(H)).  x: [B, S, d]."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xn = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xn.reshape(B, S, d) * scale + bias).astype(x.dtype)
+
+
+def time_mix_apply(cfg: ModelConfig, params, x: jnp.ndarray,
+                   state: RWKVState | None = None, chunk: int = 64):
+    """x: [B, S, d] -> (y, (shift_carry [B,d], wkv state))."""
+    p = params["tm"]
+    H, dh = _heads(cfg)
+    B, S, d = x.shape
+    x_prev = jnp.concatenate(
+        [state.shift_tm[:, None, :] if state is not None else jnp.zeros((B, 1, d), x.dtype),
+         x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, dh).swapaxes(1, 2)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, dh).swapaxes(1, 2)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, dh).swapaxes(1, 2)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    dec = p["w0"] + jnp.tanh(xw @ p["decay_lora_a"].astype(x.dtype)) @ p["decay_lora_b"].astype(x.dtype)
+    log_w = -jnp.exp(dec.astype(jnp.float32))                     # ≤ 0
+    log_w = log_w.reshape(B, S, H, dh).swapaxes(1, 2)
+    s0 = state.wkv if state is not None else None
+    eff_chunk = chunk if S % chunk == 0 else S
+    y, wkv = linear_scan.chunked_scan(r, k, v, log_w, chunk=eff_chunk,
+                                      u=p["u"], state0=s0, mode="bonus")
+    y = y.swapaxes(1, 2).reshape(B, S, d)
+    y = _group_norm_heads(y, p["ln_scale"], p["ln_bias"], H)
+    out = (y * g) @ p["wo"].astype(x.dtype)
+    return out, (x[:, -1, :], wkv)
+
+
+def channel_mix_apply(cfg: ModelConfig, params, x: jnp.ndarray,
+                      state: RWKVState | None = None):
+    p = params["cm"]
+    B, S, d = x.shape
+    x_prev = jnp.concatenate(
+        [state.shift_cm[:, None, :] if state is not None else jnp.zeros((B, 1, d), x.dtype),
+         x[:, :-1, :]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mix_k"].astype(x.dtype)
+    xr = x + dx * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (kk @ p["wv"].astype(x.dtype))
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    H, dh = _heads(cfg)
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, dh, dh), jnp.float32),
+    )
+
+
+def time_mix_decode(cfg: ModelConfig, params, x_t: jnp.ndarray, state: RWKVState):
+    """x_t: [B, 1, d].  Single-token step via the same code path (S=1)."""
+    out, (shift, wkv) = time_mix_apply(cfg, params, x_t, state=state, chunk=1)
+    return out, dataclasses.replace(state, shift_tm=shift, wkv=wkv)
+
+
+def channel_mix_decode(cfg: ModelConfig, params, x_t: jnp.ndarray, state: RWKVState):
+    out, shift = channel_mix_apply(cfg, params, x_t, state=state)
+    return out, dataclasses.replace(state, shift_cm=shift)

@@ -1,0 +1,127 @@
+"""Selective SSM branch (Hymba's Mamba heads), in Mamba-2/SSD head form.
+
+Adaptation note (DESIGN.md §Hardware adaptation): Mamba-1's per-(channel,
+state) decay does not map onto MXU-friendly chunked matmuls; we use the
+Mamba-2 SSD parameterization — scalar per-head data-dependent decay
+``a_t = exp(−Δ_t·exp(A_h))`` with per-head B/C of width ``ssm_state`` — which
+is exactly the form the shared chunked engine (:mod:`linear_scan`) computes.
+Hymba pairs these SSM heads with attention heads in parallel inside each
+block (see transformer.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+from repro.models import linear_scan
+
+__all__ = ["SSMState", "ssm_params", "ssm_apply", "ssm_decode", "init_ssm_state"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["conv", "state"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class SSMState:
+    conv: jnp.ndarray    # [B, conv_w-1, d_inner] rolling conv inputs
+    state: jnp.ndarray   # [B, H, ssm_state, head_dim]
+
+
+def _dims(cfg: ModelConfig):
+    H, dh = cfg.num_heads, cfg.head_dim
+    return H, dh, H * dh, cfg.ssm_state
+
+
+def ssm_params(cfg: ModelConfig, kg: KeyGen) -> dict:
+    H, dh, dinner, ds = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "w_in": dense_init(kg(), (d, 2 * dinner)),              # x branch + gate z
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, dinner), fan_in=cfg.ssm_conv),
+        "w_bcdt": dense_init(kg(), (dinner, H * (2 * ds + 1))),
+        "a_log": jnp.zeros((H,), jnp.float32),                  # exp(a_log)=1 decay rate
+        "dt_bias": jnp.full((H,), -1.0, jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(kg(), (dinner, d), fan_in=dinner),
+    }
+
+
+def _conv_train(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv along S.  x: [B, S, dinner]; w: [cw, dinner]."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(cw))
+    return out
+
+
+def _bcdt(cfg: ModelConfig, params, xc: jnp.ndarray):
+    """xc: [..., dinner] -> (B̃ [..., H, ds], C̃ [..., H, ds], log_w [..., H])."""
+    H, dh, dinner, ds = _dims(cfg)
+    proj = xc @ params["w_bcdt"].astype(xc.dtype)
+    proj = proj.reshape(proj.shape[:-1] + (H, 2 * ds + 1)).astype(jnp.float32)
+    b, c, dt_raw = proj[..., :ds], proj[..., ds:2 * ds], proj[..., -1]
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+    log_w = -dt * jnp.exp(params["a_log"])
+    return b, c, dt, log_w
+
+
+def ssm_apply(cfg: ModelConfig, params, x: jnp.ndarray, chunk: int = 64):
+    """Train/prefill path.  x: [B, S, d] -> (y [B, S, d], final SSMState)."""
+    H, dh, dinner, ds = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ params["w_in"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_train(xi, params["conv_w"].astype(x.dtype)))
+    b, c, dt, log_w = _bcdt(cfg, params, xc)
+
+    v = xc.reshape(B, S, H, dh).swapaxes(1, 2)                    # [B,H,S,dh]
+    r = c.swapaxes(1, 2)                                          # [B,H,S,ds]
+    kk = (b * dt[..., None]).swapaxes(1, 2)                       # Δ folded into k
+    lw = log_w.swapaxes(1, 2)[..., None]                          # [B,H,S,1]
+    eff_chunk = min(chunk, S) if S % min(chunk, S) == 0 else S
+    y, stateT = linear_scan.chunked_scan(r, kk, v.astype(jnp.float32), lw,
+                                         chunk=eff_chunk, mode="inclusive")
+    y = y + params["d_skip"][None, :, None, None] * v.astype(jnp.float32)
+    y = y.swapaxes(1, 2).reshape(B, S, dinner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(x.dtype)
+    conv_tail = xi[:, max(0, S - (cfg.ssm_conv - 1)):, :]
+    if conv_tail.shape[1] < cfg.ssm_conv - 1:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (cfg.ssm_conv - 1 - conv_tail.shape[1], 0), (0, 0)))
+    return out, SSMState(conv=conv_tail, state=stateT)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    H, dh, dinner, ds = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, dinner), dtype),
+        state=jnp.zeros((batch, H, ds, dh), jnp.float32),
+    )
+
+
+def ssm_decode(cfg: ModelConfig, params, x_t: jnp.ndarray, st: SSMState):
+    """One-token step.  x_t: [B, 1, d] -> (y [B, 1, d], new state)."""
+    H, dh, dinner, ds = _dims(cfg)
+    B = x_t.shape[0]
+    xz = x_t[:, 0] @ params["w_in"].astype(x_t.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)                             # [B, dinner]
+    window = jnp.concatenate([st.conv, xi[:, None, :]], axis=1)   # [B, cw, dinner]
+    xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                                params["conv_w"].astype(jnp.float32))).astype(x_t.dtype)
+    b, c, dt, log_w = _bcdt(cfg, params, xc)
+    v = xc.reshape(B, H, dh)
+    kk = b * dt[..., None]
+    y, state = linear_scan.decode_step(c, kk, v.astype(jnp.float32),
+                                       log_w[..., None], st.state, mode="inclusive")
+    y = y + params["d_skip"][None, :, None] * v.astype(jnp.float32)
+    y = (y.reshape(B, dinner) * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    out = (y @ params["w_out"].astype(x_t.dtype))[:, None, :]
+    return out, SSMState(conv=window[:, 1:, :], state=state)

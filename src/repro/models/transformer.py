@@ -1,0 +1,324 @@
+"""Decoder assembly for all assigned architectures.
+
+The layer stack is organized as ``pattern_repeats`` repetitions of a short
+``layer_pattern`` unit (e.g. gemma3: LLLLLG ×8; uniform archs: unit of 1).
+Parameters and per-layer caches are **stacked over repeats** and the stack is
+driven by ``lax.scan`` — compile time stays O(pattern) instead of O(layers),
+which is what makes the 94-layer qwen3 dry-run compile quickly.
+
+Block families:
+  attn   — [hybrid: ∥ SSM] attention + (MLP | MoE)
+  rwkv   — RWKV6 time-mix + channel-mix (attention-free)
+
+Modes: ``train`` (full seq, no cache), ``prefill`` (full seq → caches),
+``decode`` (one token, cache update).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.core.policy import CompressionPolicy
+from repro.models import attention as attn_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import KeyGen, apply_norm, dense_init, norm_params
+from repro.models.mlp import mlp_apply, mlp_params
+from repro.models.moe import moe_apply, moe_params
+
+__all__ = [
+    "init_params", "block_params", "forward", "decode_tokens",
+    "init_caches", "cache_cfg_for", "pick_q_chunk", "embed_tokens", "logits_from_hidden",
+]
+
+
+def pick_q_chunk(s: int, target: int = 512) -> int:
+    c = min(target, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def block_params(cfg: ModelConfig, kg: KeyGen, kind: str) -> dict:
+    if kind == "rwkv":
+        return {
+            "ln1": norm_params(cfg.d_model, "layernorm"),
+            "ln2": norm_params(cfg.d_model, "layernorm"),
+            **rwkv_lib.rwkv_params(cfg, kg),
+        }
+    p = {
+        "ln1": norm_params(cfg.d_model, cfg.norm),
+        "attn": attn_lib.attn_params(cfg, kg),
+        "ln2": norm_params(cfg.d_model, cfg.norm),
+    }
+    if cfg.moe:
+        p["moe"] = moe_params(cfg, kg)
+    else:
+        p["mlp"] = mlp_params(cfg, kg)
+    if cfg.ssm and cfg.hybrid_parallel:
+        p["ssm"] = ssm_lib.ssm_params(cfg, kg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict[str, Any] = {}
+    if cfg.modality == "audio":
+        params["embed"] = dense_init(kg(), (cfg.num_codebooks, v, d), fan_in=d)
+    else:
+        params["embed"] = dense_init(kg(), (v, d), fan_in=d)
+    if not cfg.tie_embeddings:
+        head_v = v * cfg.num_codebooks if cfg.modality == "audio" else v
+        params["lm_head"] = dense_init(kg(), (d, head_v))
+    params["final_norm"] = norm_params(d, cfg.norm)
+
+    R = cfg.pattern_repeats
+    blocks = []
+    for kind in cfg.layer_pattern:
+        keys = jax.random.split(kg(), R)
+        stacked = jax.vmap(lambda k: block_params(cfg, KeyGen(k), kind))(keys)
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+
+
+# Activations run in bf16 (mixed precision: f32 master params, f32 norm/
+# softmax internals).  Halves every dot operand's HBM traffic — see
+# EXPERIMENTS.md §Perf iteration 1.
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def embed_tokens(cfg: ModelConfig, params, batch: dict) -> jnp.ndarray:
+    scale = cfg.d_model ** 0.5 if cfg.mlp_kind == "geglu" else 1.0
+    if cfg.modality == "audio":
+        toks = batch["tokens"]  # [B, S, K]
+        emb = params["embed"]   # [K, V, d]
+        x = sum(jnp.take(emb[i], toks[..., i], axis=0) for i in range(cfg.num_codebooks))
+    elif cfg.modality == "vlm" and "img_embeds" in batch:
+        txt = jnp.take(params["embed"], batch["tokens"], axis=0) * scale
+        x = jnp.concatenate([batch["img_embeds"].astype(txt.dtype), txt], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0) * scale
+    return x.astype(COMPUTE_DTYPE)
+
+
+def logits_from_hidden(cfg: ModelConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        if cfg.modality == "audio":
+            out = jnp.einsum("bsd,kvd->bskv", h, emb.astype(h.dtype))
+            return out
+        return h @ emb.astype(h.dtype).T
+    out = h @ params["lm_head"].astype(h.dtype)
+    if cfg.modality == "audio":
+        return out.reshape(out.shape[:-1] + (cfg.num_codebooks, cfg.vocab_size))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+
+def cache_cfg_for(cfg: ModelConfig, kind: str, policy: CompressionPolicy,
+                  batch: int, capacity: int) -> cache_lib.CacheConfig:
+    if kind == "local":
+        return cache_lib.CacheConfig(
+            batch=batch, kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            capacity=min(capacity, cfg.local_window), policy=policy,
+            kind="window", window=cfg.local_window)
+    return cache_lib.CacheConfig(
+        batch=batch, kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        capacity=capacity, policy=policy,
+        kind="fp16" if policy.is_fp16 else "gear")
+
+
+def _unit_cache(cfg: ModelConfig, kind: str, policy, batch, capacity, dtype):
+    """Zero cache object for ONE layer of the given kind."""
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv_state(cfg, batch, dtype)
+    ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
+    c = cache_lib.init_layer_cache(ccfg, dtype)
+    if cfg.ssm and cfg.hybrid_parallel:
+        return (c, ssm_lib.init_ssm_state(cfg, batch, dtype))
+    return c
+
+
+def init_caches(cfg: ModelConfig, policy: CompressionPolicy, batch: int,
+                capacity: int, dtype=jnp.bfloat16):
+    """Tuple over pattern positions of caches stacked over repeats [R, ...]."""
+    R = cfg.pattern_repeats
+    out = []
+    for kind in cfg.layer_pattern:
+        one = _unit_cache(cfg, kind, policy, batch, capacity, dtype)
+        out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def _apply_block_train(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
+                       q_chunk, want_kv: bool):
+    """Returns (x, aux, cache_or_kv)."""
+    if kind == "rwkv":
+        h, (shift_tm, wkv) = rwkv_lib.time_mix_apply(cfg, bp, apply_norm(x, bp["ln1"], "layernorm"))
+        x = x + h
+        h, shift_cm = rwkv_lib.channel_mix_apply(cfg, bp, apply_norm(x, bp["ln2"], "layernorm"))
+        x = x + h
+        st = rwkv_lib.RWKVState(shift_tm=shift_tm.astype(jnp.bfloat16),
+                                shift_cm=shift_cm.astype(jnp.bfloat16), wkv=wkv)
+        return x, jnp.zeros((), jnp.float32), st if want_kv else None
+
+    xin = apply_norm(x, bp["ln1"], cfg.norm)
+    h, (k, v) = attn_lib.attention_train(cfg, bp["attn"], xin, positions, kind,
+                                         prefix_len, q_chunk)
+    ssm_state = None
+    if cfg.ssm and cfg.hybrid_parallel:
+        h2, ssm_state = ssm_lib.ssm_apply(cfg, bp["ssm"], xin)
+        h = (h + h2) * 0.5
+    x = x + h
+    xin2 = apply_norm(x, bp["ln2"], cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        m, aux = moe_apply(cfg, bp["moe"], xin2)
+    else:
+        m = mlp_apply(cfg, bp["mlp"], xin2)
+    x = x + m
+    kv_out = None
+    if want_kv:
+        kv_out = ((k, v), ssm_state) if ssm_state is not None else (k, v)
+    return x, aux, kv_out
+
+
+def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
+                        batch, capacity):
+    if kind == "rwkv":
+        h, cache = rwkv_lib.time_mix_decode(cfg, bp, apply_norm(x_t, bp["ln1"], "layernorm"), cache)
+        x_t = x_t + h
+        h, cache = rwkv_lib.channel_mix_decode(cfg, bp, apply_norm(x_t, bp["ln2"], "layernorm"), cache)
+        return x_t + h, cache
+
+    hybrid = cfg.ssm and cfg.hybrid_parallel
+    attn_cache, ssm_state = (cache if hybrid else (cache, None))
+    ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
+    xin = apply_norm(x_t, bp["ln1"], cfg.norm)
+    h, attn_cache = attn_lib.attention_decode(cfg, bp["attn"], xin, pos, attn_cache, ccfg, kind)
+    if hybrid:
+        h2, ssm_state = ssm_lib.ssm_decode(cfg, bp["ssm"], xin, ssm_state)
+        h = (h + h2) * 0.5
+    x_t = x_t + h
+    xin2 = apply_norm(x_t, bp["ln2"], cfg.norm)
+    m = moe_apply(cfg, bp["moe"], xin2)[0] if cfg.moe else mlp_apply(cfg, bp["mlp"], xin2)
+    x_t = x_t + m
+    new_cache = (attn_cache, ssm_state) if hybrid else attn_cache
+    return x_t, new_cache
+
+
+def _kv_to_cache(cfg: ModelConfig, kind, kv, policy, batch, capacity, dtype):
+    """Convert (k, v) from prefill attention into a filled layer cache."""
+    if kind == "rwkv":
+        return kv  # already an RWKVState
+    if cfg.ssm and cfg.hybrid_parallel:
+        (k, v), ssm_state = kv
+    else:
+        k, v = kv
+    ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
+    c = cache_lib.init_layer_cache(ccfg, dtype)
+    c = cache_lib.prefill_layer_cache(ccfg, c, k, v)
+    if cfg.ssm and cfg.hybrid_parallel:
+        return (c, ssm_state)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+
+
+def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
+            policy: CompressionPolicy | None = None, capacity: int = 0,
+            remat: bool = False, remat_policy: str = "full",
+            q_chunk_target: int = 512, cache_dtype=jnp.bfloat16):
+    """Full-sequence forward.
+
+    mode="train": returns (logits, aux_loss)
+    mode="prefill": returns (logits_last [B, 1, vocab...], caches, aux)
+    """
+    x = embed_tokens(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    prefix_len = cfg.num_prefix_tokens if cfg.modality == "vlm" else 0
+    q_chunk = pick_q_chunk(S, q_chunk_target)
+    want_kv = mode == "prefill"
+
+    def unit_body(carry, unit_params):
+        x, aux = carry
+        kvs = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, a, kv = _apply_block_train(cfg, unit_params[i], x, kind, positions,
+                                          prefix_len, q_chunk, want_kv)
+            aux = aux + a
+            if want_kv:
+                kvs.append(kv)
+        return (x, aux), tuple(kvs) if want_kv else None
+
+    if remat and not want_kv:
+        ckpt_policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                       if remat_policy == "dots" else None)
+        body = jax.checkpoint(unit_body, policy=ckpt_policy)
+    else:
+        body = unit_body
+    (x, aux), kv_stacks = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       params["blocks"])
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+
+    if mode == "train":
+        logits = logits_from_hidden(cfg, params, x)
+        return logits, aux
+
+    # prefill: convert stacked (k, v) into caches, logits for last position only
+    caches = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        conv = functools.partial(_kv_to_cache, cfg, kind, policy=policy, batch=B,
+                                 capacity=capacity, dtype=cache_dtype)
+        caches.append(jax.lax.map(conv, kv_stacks[i]))
+    logits = logits_from_hidden(cfg, params, x[:, -1:, :])
+    return logits, tuple(caches), aux
+
+
+def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
+                  pos, policy: CompressionPolicy, capacity: int):
+    """One decode step.  token_batch: {"tokens": [B, 1(...)]}.
+
+    Returns (logits [B, 1, ...], new caches)."""
+    x = embed_tokens(cfg, params, token_batch)
+    B = x.shape[0]
+
+    def unit_body(x, xs):
+        unit_params, unit_caches = xs
+        new_caches = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, nc = _apply_block_decode(cfg, unit_params[i], x, kind, pos,
+                                        unit_caches[i], policy, B, capacity)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(unit_body, x, (params["blocks"], caches))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits, new_caches

@@ -1,0 +1,67 @@
+"""Minimal functional AdamW (no optax dependency) with global-norm clipping."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["mu", "nu", "count"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return AdamWState(mu=zeros(params), nu=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any,
+                 lr: jnp.ndarray):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g, state.nu, grads)
+
+    def upd(p, m, n):
+        step = (m / b1c) / (jnp.sqrt(n / b2c) + cfg.eps)
+        return (p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), {"grad_norm": gnorm}

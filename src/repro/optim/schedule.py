@@ -1,0 +1,24 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lr_at"]
+
+
+def lr_at(step, *, peak: float, total_steps: int, warmup: int = 100,
+          kind: str = "cosine", stable_frac: float = 0.8,
+          final_frac: float = 0.1) -> jnp.ndarray:
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, s / max(warmup, 1))
+    if kind == "wsd":
+        # warmup → stable plateau → short exponential-ish linear decay
+        stable_end = warmup + stable_frac * (total_steps - warmup)
+        decay_span = jnp.maximum(total_steps - stable_end, 1.0)
+        frac = jnp.clip((s - stable_end) / decay_span, 0.0, 1.0)
+        post = peak * (1.0 - (1.0 - final_frac) * frac)
+        return jnp.where(s < warmup, warm, jnp.where(s < stable_end, peak, post))
+    prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

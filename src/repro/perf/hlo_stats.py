@@ -1,0 +1,92 @@
+"""Parse compiled HLO text for collective traffic and remat statistics.
+
+``collective_bytes`` sums the **operand** sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(operand shapes resolved through an instruction-definition table built from
+the whole module), per the roofline methodology in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_stats", "dtype_bytes", "op_histogram"]
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+# `%name = f32[8,128]{1,0} op-name(...)`  /  `name.1 = (f32[..], ..) tuple(..)`
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+                     r"([\w\-]+)\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def dtype_bytes(dt: str) -> float:
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES and dt != "pred":
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * dtype_bytes(dt)
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op_kind: {count, operand_bytes}} + totals."""
+    # instruction table: name -> result shape string
+    shapes: dict[str, str] = {}
+    defs: list[tuple[str, str, str, str]] = []  # (name, shape, op, argstr)
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=\n]*?\]\S*)\s+([\w\-]+)\((.*)$",
+            hlo_text, re.M):
+        name, shape, op, rest = m.groups()
+        shapes[name] = shape
+        defs.append((name, shape, op, rest))
+
+    stats: dict[str, dict] = defaultdict(lambda: {"count": 0, "operand_bytes": 0.0,
+                                                  "result_bytes": 0.0})
+    for name, shape, op, rest in defs:
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        argstr = rest.split(")", 1)[0]
+        ob = 0.0
+        for om in _OPERAND_RE.finditer(argstr):
+            opname = om.group(1)
+            if opname in shapes:
+                ob += _shape_bytes(shapes[opname])
+        if ob == 0.0:          # fallback: result size
+            ob = _shape_bytes(shape)
+        stats[kind]["count"] += 1
+        stats[kind]["operand_bytes"] += ob
+        stats[kind]["result_bytes"] += _shape_bytes(shape)
+
+    total = sum(v["operand_bytes"] for v in stats.values())
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_operand_bytes"] = total
+    out["total_count"] = sum(v["count"] for k, v in stats.items() if k in COLLECTIVES)
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Instruction-kind histogram (remat shows up as duplicated fusions)."""
+    counts: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*\(?[a-z0-9]+\[[^\]]*\][^ ]*\s+([\w\-]+)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,126 @@
+"""Serving engine: prefill + GEAR-cached decode, sharded over the mesh.
+
+The engine owns the jitted prefill/decode programs (cache donated across
+steps so decode is allocation-free), token sampling, and the byte-level
+cache accounting the memory benchmarks read.  Request-level batching is in
+:mod:`repro.serving.scheduler`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import CompressionPolicy
+from repro.dist import sharding as shd
+from repro.models.model import Model
+from repro.serving.sampling import sample
+
+__all__ = ["EngineConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    batch: int
+    capacity: int                  # max total tokens per sequence
+    policy: CompressionPolicy
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = -1               # -1: never stop early
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, ecfg: EngineConfig, mesh=None):
+        self.model = model
+        self.cfg = model.cfg
+        self.ecfg = ecfg
+        self.mesh = mesh
+        cap = self._cap()
+
+        if mesh is not None:
+            cache_abs = jax.eval_shape(
+                lambda: model.init_caches(ecfg.policy, ecfg.batch, cap))
+            self._cache_shard = shd.shardings_for(
+                mesh, shd.cache_pspecs(self.cfg, cache_abs, mesh, ecfg.batch))
+            pshard = shd.shardings_for(mesh, shd.param_pspecs(self.cfg, params, mesh))
+            self.params = jax.device_put(params, pshard)
+        else:
+            self._cache_shard = None
+            self.params = params
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, ecfg.policy, cap))
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: model.decode_step(
+                p, tok, caches, pos, ecfg.policy, cap),
+            donate_argnums=(2,))
+
+    def _cap(self) -> int:
+        nb = self.ecfg.policy.buffer_size
+        return (self.ecfg.capacity + nb - 1) // nb * nb
+
+    # ------------------------------------------------------------------
+    def prefill(self, batch: dict):
+        logits, caches = self._prefill(self.params, batch)
+        if self._cache_shard is not None:
+            caches = jax.device_put(caches, self._cache_shard)
+        return logits, caches
+
+    def decode(self, token_batch: dict, caches, pos: int):
+        return self._decode(self.params, token_batch, caches, jnp.asarray(pos, jnp.int32))
+
+    def generate(self, batch: dict, max_new_tokens: int, key=None):
+        """Greedy/sampled generation.  Returns (tokens [B, T], stats)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cfg, ecfg = self.cfg, self.ecfg
+        t0 = time.time()
+        logits, caches = self.prefill(batch)
+        t_prefill = time.time() - t0
+        prompt_len = self._prompt_len(batch)
+
+        tok = sample(logits[:, -1], key, ecfg.temperature, ecfg.top_k)
+        out = [tok]
+        done = jnp.zeros(tok.shape[:1], bool)
+        t1 = time.time()
+        for t in range(max_new_tokens - 1):
+            tb = {"tokens": tok[:, None] if cfg.modality != "audio" else tok[:, None, :]}
+            logits, caches = self.decode(tb, caches, prompt_len + t)
+            key = jax.random.fold_in(key, t)
+            tok = sample(logits[:, -1], key, ecfg.temperature, ecfg.top_k)
+            if ecfg.eos_id >= 0:
+                done = done | (tok == ecfg.eos_id) if cfg.modality != "audio" else done
+                tok = jnp.where(done, ecfg.eos_id, tok) if cfg.modality != "audio" else tok
+            out.append(tok)
+            if ecfg.eos_id >= 0 and bool(done.all()):
+                break
+        toks = jnp.stack(out, axis=1)
+        t_decode = time.time() - t1
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_per_s": toks.shape[0] * (toks.shape[1] - 1) / max(t_decode, 1e-9),
+            "cache_bytes": self.cache_nbytes(caches),
+        }
+        return toks, stats
+
+    def _prompt_len(self, batch) -> int:
+        n = batch["tokens"].shape[1]
+        if self.cfg.modality == "vlm":
+            n += self.cfg.num_prefix_tokens
+        return n
+
+    def init_caches(self):
+        caches = self.model.init_caches(self.ecfg.policy, self.ecfg.batch, self._cap())
+        if self._cache_shard is not None:
+            caches = jax.device_put(caches, self._cache_shard)
+        return caches
+
+    @staticmethod
+    def cache_nbytes(caches) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))

@@ -1,0 +1,20 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(logits: jnp.ndarray, key: jax.Array, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits [..., V] -> token ids [...]. temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

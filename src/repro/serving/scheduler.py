@@ -1,0 +1,79 @@
+"""Request-level batching scheduler on top of the engine.
+
+Wave-based continuous batching: pending requests are padded/grouped into
+fixed-size waves (the engine's static batch), each wave generates until
+every member hits EOS or its token budget, finished slots return results
+and the next wave starts.  Straggler mitigation at this level is budget
+capping — a slot can never hold a wave longer than ``max_new_tokens``.
+
+(True slot-level continuous batching — splicing a new request into a live
+batch — requires per-slot cache re-prefill; the cache layout supports it
+(all per-slot state is batch-dim addressable) and it is left as an
+extension point, documented in DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine
+
+__all__ = ["Request", "Result", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # [prompt_len] int32
+    max_new_tokens: int = 64
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: np.ndarray            # generated ids
+    prefill_s: float
+    decode_s: float
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, prompt_pad: int):
+        self.engine = engine
+        self.prompt_pad = prompt_pad
+        self.queue: deque[Request] = deque()
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> list[Result]:
+        """Drain the queue in engine-batch-sized waves."""
+        results: list[Result] = []
+        B = self.engine.ecfg.batch
+        while self.queue:
+            wave = [self.queue.popleft() for _ in range(min(B, len(self.queue)))]
+            while len(wave) < B:                      # pad with a copy slot
+                wave.append(Request(rid=-1, tokens=wave[0].tokens,
+                                    max_new_tokens=wave[0].max_new_tokens))
+            prompts = np.stack([_pad(r.tokens, self.prompt_pad) for r in wave])
+            budget = max(r.max_new_tokens for r in wave)
+            toks, stats = self.engine.generate(
+                {"tokens": jnp.asarray(prompts, jnp.int32)}, budget)
+            toks = np.asarray(toks)
+            for i, r in enumerate(wave):
+                if r.rid < 0:
+                    continue
+                results.append(Result(rid=r.rid, tokens=toks[i, : r.max_new_tokens],
+                                      prefill_s=stats["prefill_s"],
+                                      decode_s=stats["decode_s"]))
+        return results
+
+
+def _pad(tokens: np.ndarray, length: int) -> np.ndarray:
+    if len(tokens) >= length:
+        return tokens[-length:]
+    return np.pad(tokens, (length - len(tokens), 0))

@@ -1,0 +1,54 @@
+"""Train state + run configuration."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init
+
+__all__ = ["RunConfig", "TrainState", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    total_steps: int = 1000
+    warmup_steps: int = 100
+    microbatches: int = 1          # gradient accumulation
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots (save dot outputs, recompute elementwise)
+    zero1: bool = True             # shard optimizer moments over data axis
+    grad_compression: str = "none"  # none | powersgd  (cross-pod axis)
+    powersgd_rank: int = 8
+    powersgd_min_size: int = 65536
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 200
+    log_every: int = 10
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    seq_parallel: bool = False
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "opt", "step", "ef"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray
+    ef: Any  # PowerSGD error feedback (tree of arrays/None) or None
+
+
+def init_train_state(params: Any, run: RunConfig) -> TrainState:
+    ef = None
+    if run.grad_compression == "powersgd":
+        from repro.optim.grad_compress import CompressorConfig, init_error_feedback
+        ef = init_error_feedback(params, CompressorConfig(rank=run.powersgd_rank, min_size=run.powersgd_min_size))
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), ef=ef)

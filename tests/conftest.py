@@ -1,0 +1,14 @@
+import jax
+import pytest
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single device; only the dry-run (and the
+# explicitly marked multi-device tests, which re-exec in a subprocess)
+# use fake device counts.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

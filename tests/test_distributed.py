@@ -1,0 +1,163 @@
+"""Distributed tests: sharding rules, train loop on a mesh, PowerSGD,
+checkpoint/restore/elastic-rescale.  Multi-device cases re-exec in a
+subprocess so the fake host-device count never leaks into other tests."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.dist.sharding import fit_spec
+from repro.launch.mesh import make_test_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(body: str, devices: int = 4) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestFitSpec:
+    def test_migrates_axis(self):
+        class FakeMesh:
+            shape = {"data": 4, "model": 4}
+        ps = fit_spec(P("model", None), (122753, 2304), FakeMesh())
+        assert tuple(ps) == (None, "model")
+
+    def test_drops_axis(self):
+        class FakeMesh:
+            shape = {"data": 4, "model": 4}
+        ps = fit_spec(P("model",), (7,), FakeMesh())
+        assert tuple(ps) == (None,)
+
+    def test_keeps_legal(self):
+        class FakeMesh:
+            shape = {"data": 4, "model": 4}
+        ps = fit_spec(P(None, "model"), (8, 16), FakeMesh())
+        assert tuple(ps) == (None, "model")
+
+
+def test_train_restore_deterministic(tmp_path):
+    """6 steps straight == 3 steps + restart + 3 steps (bitwise metrics)."""
+    out = run_subprocess(f"""
+        import jax, dataclasses, json
+        from repro.configs import smoke_config
+        from repro.models.model import build_model
+        from repro.launch.mesh import make_test_mesh
+        from repro.train.state import RunConfig
+        from repro.train.loop import train_loop
+        from repro.data.synthetic import DataConfig
+
+        cfg = smoke_config("minicpm-2b")
+        m = build_model(cfg)
+        mesh = make_test_mesh(2, 2)
+        dc = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+        logs = []
+        run = RunConfig(total_steps=6, warmup_steps=1, microbatches=2, remat=True,
+                        zero1=True, ckpt_dir="{tmp_path}/a", ckpt_every=0, log_every=1)
+        s1 = train_loop(m, mesh, run, dc, log_fn=logs.append)
+        runb = dataclasses.replace(run, total_steps=3, ckpt_dir="{tmp_path}/b", ckpt_every=0)
+        import repro.ckpt.checkpoint as ck
+        s2 = train_loop(m, mesh, runb, dc, log_fn=lambda *_: None)
+        ck.save("{tmp_path}/b", 3, s2)
+        runc = dataclasses.replace(run, total_steps=6, ckpt_dir="{tmp_path}/b", ckpt_every=0)
+        s3 = train_loop(m, mesh, runc, dc, log_fn=lambda *_: None)
+        import numpy as np
+        p1 = jax.tree.leaves(s1.params); p3 = jax.tree.leaves(s3.params)
+        diff = max(float(abs(np.asarray(a)-np.asarray(b)).max()) for a, b in zip(p1, p3))
+        print("MAXDIFF", diff)
+    """)
+    diff = float(out.split("MAXDIFF")[1].strip())
+    assert diff < 1e-5
+
+
+def test_elastic_rescale_restore(tmp_path):
+    """Checkpoint on a 2×2 mesh restores onto a 4×1 mesh (mesh-independent)."""
+    run_subprocess(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import smoke_config
+        from repro.models.model import build_model
+        from repro.launch.mesh import make_test_mesh
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.loop import train_state_shardings
+        from repro.dist import sharding as shd
+        import repro.ckpt.checkpoint as ck
+
+        cfg = smoke_config("minicpm-2b")
+        m = build_model(cfg)
+        run = RunConfig(ckpt_every=0)
+        mesh1 = make_test_mesh(2, 2)
+        with mesh1:
+            state = init_train_state(m.init(jax.random.PRNGKey(0)), run)
+            sh1 = train_state_shardings(cfg, mesh1, state, run)
+            state = jax.device_put(state, sh1)
+            ck.save("{tmp_path}/ck", 1, state)
+        mesh2 = make_test_mesh(4, 1)
+        with mesh2:
+            tgt = init_train_state(m.init(jax.random.PRNGKey(0)), run)
+            sh2 = train_state_shardings(cfg, mesh2, tgt, run)
+            restored = ck.restore("{tmp_path}/ck", 1, tgt, sh2)
+        a = jax.tree.leaves(state.params)[0]
+        b = jax.tree.leaves(restored.params)[0]
+        assert np.allclose(np.asarray(a), np.asarray(b)), "elastic restore mismatch"
+        print("ELASTIC_OK")
+    """)
+
+
+def test_powersgd_runs_on_pod_mesh(tmp_path):
+    run_subprocess(f"""
+        import dataclasses
+        from repro.configs import smoke_config
+        from repro.models.model import build_model
+        from repro.launch.mesh import make_test_mesh
+        from repro.train.state import RunConfig
+        from repro.train.loop import train_loop
+        from repro.data.synthetic import DataConfig
+        cfg = smoke_config("minicpm-2b")
+        m = build_model(cfg)
+        mesh = make_test_mesh(data=2, model=2, pod=2)
+        run = RunConfig(total_steps=2, warmup_steps=1, microbatches=1, remat=False,
+                        zero1=False, grad_compression="powersgd", powersgd_rank=2,
+                        powersgd_min_size=4096, ckpt_dir="{tmp_path}/ps",
+                        ckpt_every=0, log_every=1)
+        dc = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+        logs = []
+        train_loop(m, mesh, run, dc, log_fn=logs.append)
+        assert any("compressed_bytes" in l and "compressed_bytes=0 " not in l for l in logs), logs
+        print("POWERSGD_OK")
+    """, devices=8)
+
+
+def test_serving_on_mesh(tmp_path):
+    run_subprocess("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import smoke_config
+        from repro.models.model import build_model
+        from repro.core.policy import named_policy
+        from repro.launch.mesh import make_test_mesh
+        from repro.serving.engine import Engine, EngineConfig
+        cfg = smoke_config("minicpm-2b")
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        pol = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=16)
+        mesh = make_test_mesh(2, 2)
+        with mesh:
+            eng = Engine(m, params, EngineConfig(batch=4, capacity=96, policy=pol), mesh=mesh)
+            batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0, cfg.vocab_size)}
+            toks, stats = eng.generate(batch, 8)
+        assert toks.shape == (4, 8)
+        print("SERVE_MESH_OK")
+    """)

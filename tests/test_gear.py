@@ -1,0 +1,88 @@
+"""GEAR composition tests — the paper's central claims in miniature."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gear, metrics
+from repro.core.policy import CompressionPolicy, named_policy
+
+
+def _kv_like(key, shape=(4, 256, 128), outlier_p=0.01, outlier_scale=6.0):
+    """Heavy-tailed, token-correlated tensor resembling real KV caches."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = jax.random.normal(k1, shape)
+    # token correlation (shared low-rank structure across tokens)
+    u = jax.random.normal(k2, shape[:-2] + (shape[-2], 8))
+    v = jax.random.normal(k3, shape[:-2] + (8, shape[-1]))
+    x = base + 1.5 * u @ v
+    mask = jax.random.bernoulli(k1, outlier_p, shape)
+    return x * (1 + outlier_scale * mask)
+
+
+def test_error_ordering_matches_paper_fig1a(rng):
+    """err(GEAR) < err(GEAR-L) < err(quant-only); outliers help (Table 8)."""
+    x = _kv_like(rng)
+    errs = {n: float(gear.approx_error(x, named_policy(n), "k"))
+            for n in ("kivi2", "outlier_kivi2", "gear_l_kivi2", "gear_kivi2")}
+    assert errs["gear_kivi2"] < errs["gear_l_kivi2"] < errs["kivi2"]
+    assert errs["outlier_kivi2"] < errs["kivi2"]
+    assert errs["gear_kivi2"] < errs["outlier_kivi2"]
+
+
+def test_gear_4bit_near_lossless(rng):
+    x = _kv_like(rng)
+    err = float(gear.approx_error(x, named_policy("gear_kcvt4"), "k"))
+    assert err < 0.08
+
+
+def test_decompress_roundtrip_structure(rng):
+    x = _kv_like(rng, (2, 64, 64))
+    pol = named_policy("gear_kivi2")
+    cm = gear.compress_matrix(x, pol, "k")
+    xh = gear.decompress_matrix(cm)
+    assert xh.shape == x.shape
+    assert cm.qt.packed.dtype == jnp.int32
+    assert cm.a is not None and cm.sparse is not None
+    # compressed strictly smaller than fp16
+    assert cm.size_bytes() < x.size * 2
+
+
+def test_error_reduction_monotone_in_rank(rng):
+    x = _kv_like(rng)
+    errs = []
+    for r in (0, 2, 8):
+        pol = CompressionPolicy("gear_l" if r else "quant", "kivi", bits=2, rank=max(r, 1))
+        errs.append(float(gear.approx_error(x, pol, "k")))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_v_orientation(rng):
+    x = _kv_like(rng)
+    e_k = float(gear.approx_error(x, named_policy("gear_kivi2"), "k"))
+    e_v = float(gear.approx_error(x, named_policy("gear_kivi2"), "v"))
+    assert e_k < 0.6 and e_v < 0.6
+
+
+def test_kv_size_fractions_match_paper_table9():
+    """Analytic KV-size within ~1.5% absolute of the paper's Table 9/1."""
+    n, d = 1156, 4096  # GSM8k prefill 900 + gen 256
+    cases = [
+        ("kivi2", 64, 0.217), ("per_token_q4", 64, 0.342),
+        ("kcvt4", 20, 0.271), ("gear_l_kivi2", 64, 0.236),
+        ("gear_kivi2", 64, 0.276),
+    ]
+    for name, nb, expect in cases:
+        pol = dataclasses.replace(named_policy(name), buffer_size=nb)
+        got = metrics.kv_size_fraction(pol, n, d, num_heads=32, head_dim=128)
+        assert abs(got - expect) < 0.015, (name, got, expect)
+
+
+def test_compression_ratio_2bit_beats_4bit():
+    pol2 = named_policy("gear_kivi2")
+    pol4 = named_policy("gear_kcvt4")
+    f2 = metrics.kv_size_fraction(pol2, 4096, 4096, 32, 128)
+    f4 = metrics.kv_size_fraction(pol4, 4096, 4096, 32, 128)
+    assert f2 < f4 < 0.35

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CacheConfig, named_policy, init_layer_cache, prefill_layer_cache
+from repro.kernels.quant_pack import quant_pack
+from repro.kernels.gear_decode import gear_decode
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("N,n,d", [(4, 64, 128), (2, 16, 64), (1, 64, 256), (8, 32, 32)])
+def test_quant_pack_sweep(bits, N, n, d, rng):
+    x = jax.random.normal(rng, (N, n, d), jnp.float32)
+    pk, sk, zk = quant_pack(x, bits, interpret=True)
+    pr, sr, zr = ref.quant_pack_ref(x, bits)
+    assert (pk == pr).all()
+    assert jnp.allclose(sk, sr) and jnp.allclose(zk, zr)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_pack_dtypes(dtype, rng):
+    from repro.core import packing
+    x = jax.random.normal(rng, (2, 64, 128)).astype(dtype)
+    pk, sk, zk = quant_pack(x, 4, interpret=True)
+    pr, sr, zr = ref.quant_pack_ref(x, 4)
+    assert jnp.allclose(sk, sr) and jnp.allclose(zk, zr)
+    if dtype == jnp.float32:
+        assert (pk == pr).all()
+    else:
+        # bf16 inputs hit round-half boundaries where fma ordering flips the
+        # code by ±1 (≪0.1% of entries) — allow exactly that jitter.
+        ck = packing.unpack(pk, 4, 128)
+        cr = packing.unpack(pr, 4, 128)
+        diff = jnp.abs(ck - cr)
+        assert int(diff.max()) <= 1
+        assert float((diff > 0).mean()) < 1e-3
+
+
+def _cache_arrays(polname, B=2, H=2, Dh=128, S=128, n=100, nb=None):
+    pol = named_policy(polname)
+    if nb:
+        pol = dataclasses.replace(pol, buffer_size=nb, group=min(pol.group, nb))
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=Dh, capacity=S, policy=pol)
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (B, H, n, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, H, n, Dh))
+    cache = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
+    BH = B * H
+    flat = lambda x: None if x is None else x.reshape((BH,) + x.shape[2:])
+    n_comp = (cache.length // cfg.chunk) * cfg.chunk
+    common = (flat(cache.k_packed), flat(cache.k_scale), flat(cache.k_zero),
+              flat(cache.v_packed), flat(cache.v_scale), flat(cache.v_zero), n_comp)
+    extras = dict(
+        k_a=flat(cache.k_a), k_b=flat(cache.k_b), v_a=flat(cache.v_a),
+        v_b=flat(cache.v_b), k_sp_val=flat(cache.k_sp_val),
+        k_sp_idx=flat(cache.k_sp_idx), v_sp_val=flat(cache.v_sp_val),
+        v_sp_idx=flat(cache.v_sp_idx))
+    extras = {k2: v2 for k2, v2 in extras.items() if v2 is not None}
+    return cfg, common, extras
+
+
+@pytest.mark.parametrize("polname", ["gear_kivi2", "gear_l_kivi2", "kivi2",
+                                     "gear_kcvt4", "kcvt4", "outlier_kivi2"])
+@pytest.mark.parametrize("G,Dh,S", [(2, 128, 128), (1, 64, 64), (4, 128, 192)])
+def test_gear_decode_sweep(polname, G, Dh, S, rng):
+    nb = 64 if S % 64 == 0 else 32
+    cfg, common, extras = _cache_arrays(polname, Dh=Dh, S=S, n=S - 10, nb=nb)
+    q = jax.random.normal(rng, (4, G, Dh))
+    kwargs = dict(bits=cfg.policy.bits, chunk=cfg.chunk, scale_factor=Dh**-0.5)
+    acc_r, m_r, l_r = ref.gear_decode_ref(q, *common, **kwargs, **extras)
+    acc_k, m_k, l_k = gear_decode(q, *common, interpret=True, **kwargs, **extras)
+    assert jnp.allclose(m_k[..., 0], m_r, atol=1e-4)
+    out_r = acc_r / l_r[..., None]
+    out_k = acc_k / l_k[..., 0:1]
+    assert jnp.allclose(out_k, out_r, atol=1e-4), float(jnp.abs(out_k - out_r).max())
+
+
+@pytest.mark.parametrize("S,Dh,bq,bk", [(128, 64, 32, 32), (256, 128, 64, 64),
+                                        (64, 64, 64, 16), (128, 256, 32, 128)])
+@pytest.mark.parametrize("window,prefix,cap", [(0, 0, 0.0), (48, 0, 0.0),
+                                               (0, 24, 0.0), (0, 0, 20.0)])
+def test_flash_prefill_sweep(S, Dh, bq, bk, window, prefix, cap, rng):
+    q = jax.random.normal(rng, (2, S, Dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, S, Dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, S, Dh), jnp.float32)
+    o_k = flash_prefill(q, k, v, bq=bq, bk=bk, window=window, prefix_len=prefix,
+                        softcap=cap, interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, jnp.arange(S), causal=True, window=window,
+                                prefix_len=prefix, softcap=cap)
+    assert jnp.allclose(o_k, o_r, atol=2e-4), float(jnp.abs(o_k - o_r).max())
+
+
+def test_flash_prefill_bf16(rng):
+    q = jax.random.normal(rng, (2, 128, 64)).astype(jnp.bfloat16)
+    k, v = q + 0.1, q - 0.1
+    o_k = flash_prefill(q, k, v, bq=32, bk=32, interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, jnp.arange(128))
+    assert jnp.allclose(o_k.astype(jnp.float32), o_r.astype(jnp.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("mode", ["inclusive", "bonus"])
+@pytest.mark.parametrize("S,Dk,Dv,chunk", [(64, 8, 16, 16), (128, 16, 16, 64),
+                                           (32, 4, 8, 8)])
+def test_linear_scan_kernel_sweep(mode, S, Dk, Dv, chunk, rng):
+    from repro.kernels.linear_scan_kernel import linear_scan_chunked
+    from repro.models.linear_scan import chunked_scan
+    B, H = 2, 2
+    r = jax.random.normal(rng, (B, H, S, Dk))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, S, Dk))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, H, S, Dv))
+    lw = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 3), (B, H, S, Dk)))
+    u = jax.random.normal(jax.random.fold_in(rng, 4), (H, Dk)) * 0.5
+    y_ref, st_ref = chunked_scan(r, k, v, lw, chunk=chunk, u=u, mode=mode)
+    BH = B * H
+    fl = lambda x: x.reshape((BH,) + x.shape[2:])
+    uu = jnp.broadcast_to(u[None], (B, H, Dk)).reshape(BH, Dk)
+    y_k, st_k = linear_scan_chunked(fl(r), fl(k), fl(v), fl(lw), u=uu,
+                                    chunk=chunk, mode=mode, interpret=True)
+    assert jnp.allclose(y_k.reshape(B, H, S, Dv), y_ref, atol=2e-3)
+    assert jnp.allclose(st_k.reshape(B, H, Dk, Dv), st_ref, atol=2e-3)

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions (assignment requirement f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, smoke_config, shapes_for
+from repro.core.policy import FP16, named_policy
+from repro.models import transformer as tfm
+from repro.models.model import build_model, input_specs
+
+POL = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=16)
+
+
+def _batch(cfg, B=2, S=32, key=jax.random.PRNGKey(3)):
+    if cfg.modality == "vlm":
+        p = cfg.num_prefix_tokens
+        return {"tokens": jax.random.randint(key, (B, S - p), 0, cfg.vocab_size),
+                "img_embeds": jax.random.normal(key, (B, p, cfg.d_model), jnp.bfloat16)}
+    if cfg.modality == "audio":
+        return {"tokens": jax.random.randint(key, (B, S, cfg.num_codebooks), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch, rng):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: model.loss_fn(p, b))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_smoke(arch, rng):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    logits, caches = model.prefill(params, batch, POL, 64)
+    if cfg.modality == "audio":
+        assert logits.shape == (B, 1, cfg.num_codebooks, cfg.vocab_size)
+        tok = {"tokens": jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)}
+    else:
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        tok = {"tokens": jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)}
+    logits2, caches2 = model.decode_step(params, tok, caches, jnp.asarray(S), POL, 64)
+    assert bool(jnp.isfinite(jnp.asarray(logits2, jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "gemma3-12b", "rwkv6-3b",
+                                  "hymba-1.5b", "llama4-scout-17b-a16e"])
+def test_decode_matches_full_forward(arch, rng):
+    """fp16-cache decode == full forward (MoE at no-drop capacity)."""
+    cfg = smoke_config(arch)
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 31
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    logits_full, _ = tfm.forward(cfg, params, {"tokens": toks}, mode="train")
+    logits_pf, caches = model.prefill(params, {"tokens": toks[:, :S]}, FP16, 64)
+    # activations are bf16: per-element tolerance scales with depth; the
+    # decision-relevant check is argmax agreement.
+    assert jnp.allclose(logits_pf[:, 0].astype(jnp.float32),
+                        logits_full[:, S - 1].astype(jnp.float32), atol=1e-1), arch
+    assert (jnp.argmax(logits_pf[:, 0], -1) == jnp.argmax(logits_full[:, S - 1], -1)).all(), arch
+    logits_dec, _ = model.decode_step(params, {"tokens": toks[:, S:]}, caches,
+                                      jnp.asarray(S), FP16, 64)
+    assert jnp.allclose(logits_dec[:, 0].astype(jnp.float32),
+                        logits_full[:, S].astype(jnp.float32), atol=2e-1), arch
+    agree = (jnp.argmax(logits_dec[:, 0], -1) == jnp.argmax(logits_full[:, S], -1)).mean()
+    assert agree >= 0.5, (arch, float(agree))
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact assigned hyper-params."""
+    expect = {
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff if not c.moe else c.moe_d_ff, c.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("qwen3-moe-235b-a22b").num_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").moe_top_k == 8
+    assert get_config("llama4-scout-17b-a16e").num_experts == 16
+    assert get_config("llama4-scout-17b-a16e").moe_top_k == 1
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("rwkv6-3b").rwkv
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs import SHAPES
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape in shapes_for(arch):
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(s, "shape") for s in jax.tree.leaves(specs))

@@ -1,0 +1,95 @@
+"""Unit tests for the perf tooling: jaxpr cost model, HLO collective parser,
+roofline math, LR schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.schedule import lr_at
+from repro.perf.hlo_stats import collective_stats, _shape_bytes
+from repro.perf.jaxpr_cost import trace_cost
+from repro.perf.roofline import roofline, model_flops, HW
+from repro.configs import get_config, SHAPES
+
+
+class TestJaxprCost:
+    def test_matmul_flops_exact(self):
+        c = trace_cost(lambda a, b: a @ b, jnp.zeros((128, 256)), jnp.zeros((256, 64)))
+        assert c["flops"] == 2 * 128 * 256 * 64
+
+    def test_scan_multiplies_trip_count(self):
+        def f(x):
+            return jax.lax.scan(lambda c, _: (c @ jnp.ones((32, 32)), None),
+                                x, None, length=7)[0]
+        c = trace_cost(f, jnp.zeros((32, 32)))
+        assert c["flops"] == 7 * 2 * 32**3
+
+    def test_elementwise_zero_bytes(self):
+        c = trace_cost(lambda x: jnp.tanh(x) + 1.0, jnp.zeros((1024, 1024)))
+        assert c["bytes"] == 0.0
+
+    def test_grad_roughly_3x_forward(self):
+        f = lambda w, x: jnp.sum((x @ w) ** 2)
+        w, x = jnp.zeros((64, 64)), jnp.zeros((128, 64))
+        fwd = trace_cost(f, w, x)["flops"]
+        bwd = trace_cost(lambda w, x: jax.grad(f)(w, x), w, x)["flops"]
+        assert 2.0 <= bwd / fwd <= 4.0
+
+
+class TestHloStats:
+    HLO = """
+  %p = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%p), replica_groups={}
+  %ag = bf16[64,512]{1,0} all-gather(%ar), dimensions={0}
+  %x = f32[4,4]{1,0} add(%p, %p)
+"""
+
+    def test_counts_and_bytes(self):
+        st = collective_stats(self.HLO)
+        assert st["all-reduce"]["count"] == 1
+        assert st["all-gather"]["count"] == 1
+        assert st["all-reduce"]["operand_bytes"] == 128 * 256 * 4
+        assert st["total_count"] == 2
+
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[8,8]{1,0}") == 256
+        assert _shape_bytes("bf16[10]") == 20
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        rl = roofline(hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e10,
+                      chips=256, model_flops_total=5e14)
+        assert abs(rl.compute_s - 1e15 / (256 * HW["peak_flops"])) < 1e-12
+        assert rl.bottleneck in ("compute", "memory", "collective")
+        assert 0 < rl.flops_efficiency <= 1.0
+
+    def test_model_flops_rwkv_has_no_kv_read(self):
+        r = get_config("rwkv6-3b")
+        m = get_config("minicpm-2b")
+        s = SHAPES["decode_32k"]
+        # per active-param flop, rwkv decode must be cheaper (no cache reads)
+        assert (model_flops(r, s) / r.active_param_count()
+                < model_flops(m, s) / m.active_param_count())
+
+    def test_model_flops_window_caps_local_layers(self):
+        g = get_config("gemma3-12b")
+        full = model_flops(g, SHAPES["decode_32k"])
+        # recompute with all-global would be larger
+        import dataclasses
+        g2 = dataclasses.replace(g, attn_pattern="global")
+        assert model_flops(g2, SHAPES["decode_32k"]) > full
+
+
+class TestSchedules:
+    def test_cosine_shape(self):
+        lrs = [float(lr_at(s, peak=1.0, total_steps=100, warmup=10)) for s in
+               (0, 5, 10, 50, 100)]
+        assert lrs[0] == 0.0 and abs(lrs[2] - 1.0) < 1e-6
+        assert lrs[3] < 1.0 and lrs[4] <= lrs[3]
+
+    def test_wsd_plateau(self):
+        lrs = [float(lr_at(s, peak=1.0, total_steps=100, warmup=10, kind="wsd"))
+               for s in (10, 40, 80, 100)]
+        assert abs(lrs[0] - 1.0) < 1e-6 and abs(lrs[1] - 1.0) < 1e-6
+        assert lrs[2] <= 1.0 and lrs[3] < lrs[1]

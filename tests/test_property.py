@@ -1,0 +1,136 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import gear, metrics, packing, quant, outlier
+from repro.core.policy import CompressionPolicy, named_policy
+from repro.models.linear_scan import chunked_scan, sequential_scan_ref
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(bits=st.sampled_from([2, 4, 8]),
+       rows=st.integers(1, 8), lanes=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_pack_unpack_identity(bits, rows, lanes, seed):
+    per = 32 // bits
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (rows, lanes * per),
+                               0, 2**bits)
+    assert (packing.unpack(packing.pack(codes, bits), bits) == codes).all()
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 4, 8]),
+       scheme=st.sampled_from(["per_channel", "per_token", "per_token_group"]))
+@settings(**SETTINGS)
+def test_quant_error_bounded_by_group_range(seed, bits, scheme):
+    """|x − deq(q(x))| ≤ Δ/2 + eps elementwise — uniform quantizer invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 16, 32)) * 3
+    group = 16 if scheme == "per_token_group" else None
+    qt = quant.quantize(x, bits, scheme, group)
+    xh = quant.dequantize(qt)
+    # per-entry error bounded by half the step of its group
+    if scheme == "per_channel":
+        delta = (x.max(1, keepdims=True) - x.min(1, keepdims=True)) / (2**bits - 1)
+    elif scheme == "per_token":
+        delta = (x.max(-1, keepdims=True) - x.min(-1, keepdims=True)) / (2**bits - 1)
+    else:
+        xg = x.reshape(2, 16, 2, 16)
+        d = (xg.max(-1, keepdims=True) - xg.min(-1, keepdims=True)) / (2**bits - 1)
+        delta = jnp.broadcast_to(d, xg.shape).reshape(x.shape)
+    assert (jnp.abs(x - xh) <= delta / 2 + 1e-4).all()
+
+
+@given(seed=st.integers(0, 2**16), s=st.floats(0.02, 0.3),
+       axis=st.sampled_from(["token", "channel"]))
+@settings(**SETTINGS)
+def test_outlier_exact_split(seed, s, axis):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 20, 16))
+    sp, rem = outlier.filter_outliers(x, s, axis)
+    assert jnp.allclose(rem + outlier.densify(sp), x, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_gear_never_worse_than_quant(seed):
+    """Adding error-reduction components never increases approximation error."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 64, 32)) * (
+        1 + 4 * jax.random.bernoulli(jax.random.fold_in(key, 1), 0.02, (2, 64, 32)))
+    pol_q = CompressionPolicy("quant", "kivi", bits=2, group=32, buffer_size=64)
+    pol_g = CompressionPolicy("gear", "kivi", bits=2, group=32, buffer_size=64)
+    e_q = float(gear.approx_error(x, pol_q, "k"))
+    e_g = float(gear.approx_error(x, pol_g, "k"))
+    assert e_g <= e_q + 1e-3
+
+
+@given(n=st.integers(256, 4096), d=st.sampled_from([1024, 4096]),
+       name=st.sampled_from(["kivi2", "gear_kivi2", "gear_l_kivi2", "kcvt4"]))
+@settings(**SETTINGS)
+def test_kv_size_fraction_sane(n, d, name):
+    pol = named_policy(name)
+    f = metrics.kv_size_fraction(pol, n, d, num_heads=8, head_dim=128)
+    assert 0.05 < f < 1.0
+    # compressed always beats fp16; 2-bit beats that policy's own quant bytes floor
+    assert f > pol.bits / 16.0 * 0.9
+
+
+@given(seed=st.integers(0, 2**12), chunk=st.sampled_from([4, 8, 16]),
+       mode=st.sampled_from(["inclusive", "bonus"]))
+@settings(max_examples=10, deadline=None)
+def test_chunked_scan_equals_sequential(seed, chunk, mode):
+    key = jax.random.PRNGKey(seed)
+    B, H, S, Dk, Dv = 1, 2, 32, 4, 8
+    r = jax.random.normal(key, (B, H, S, Dk))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, Dk))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, Dv))
+    lw = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (B, H, S, Dk)))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, Dk)) * 0.3
+    y1, s1 = chunked_scan(r, k, v, lw, chunk=chunk, u=u, mode=mode)
+    y2, s2 = sequential_scan_ref(r, k, v, lw, u=u, mode=mode)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3)
+
+
+@given(n_prefill=st.integers(5, 40), n_decode=st.integers(0, 12),
+       seed=st.integers(0, 2**10))
+@settings(max_examples=8, deadline=None)
+def test_cache_roundtrip_any_phase(n_prefill, n_decode, seed):
+    """Streaming-buffer invariant: after ANY prefill length and ANY number of
+    appended tokens, dense reconstruction matches the true KV within the
+    policy's quantization error, and buffered tokens round-trip exactly."""
+    from repro.core import (CacheConfig, named_policy, init_layer_cache,
+                            prefill_layer_cache, append_token, dense_kv)
+    key = jax.random.PRNGKey(seed)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=16)
+    B, H, DH = 1, 2, 32
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=pol)
+    k = jax.random.normal(key, (B, H, n_prefill, DH))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, H, n_prefill, DH))
+    cache = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
+    ks, vs = [k], [v]
+    for t in range(n_decode):
+        kt = jax.random.normal(jax.random.fold_in(key, 100 + t), (B, H, DH))
+        vt = jax.random.normal(jax.random.fold_in(key, 200 + t), (B, H, DH))
+        cache = append_token(cfg, cache, kt, vt)
+        ks.append(kt[:, :, None]); vs.append(vt[:, :, None])
+    total = n_prefill + n_decode
+    assert int(cache.length) == total
+    k_all = jnp.concatenate(ks, axis=2)
+    kh, _ = dense_kv(cfg, cache)
+    rel = float(jnp.linalg.norm(kh[:, :, :total] - k_all) / jnp.linalg.norm(k_all))
+    assert rel < 0.25, rel  # 4-bit GEAR bound
+    # tokens still in the buffer are exact (bf16)
+    nb = cfg.chunk
+    n_buf = total - (total // nb) * nb
+    if n_buf:
+        buffered = k_all[:, :, total - n_buf:]
+        np.testing.assert_allclose(np.asarray(kh[:, :, total - n_buf: total]),
+                                   np.asarray(buffered), atol=2e-2)
