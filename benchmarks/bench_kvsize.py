@@ -48,4 +48,13 @@ def run():
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the emitted rows to this JSON file")
+    args = ap.parse_args()
     run()
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)

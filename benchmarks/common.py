@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: realistic KV tensors, timing, CSV rows."""
+"""Shared benchmark utilities: realistic KV tensors, timing, CSV/JSON rows."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,6 +15,16 @@ ROWS: list[tuple] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str) -> None:
+    """Dump every row emitted so far as a JSON list (CI bench artifacts)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    rows = [{"name": n, "us_per_call": t, "derived": der} for n, t, der in ROWS]
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
 
 
 def kv_like(key, shape=(1, 8, 1024, 128), outlier_p=0.005, outlier_scale=8.0,

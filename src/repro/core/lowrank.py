@@ -29,20 +29,44 @@ def _batched_qr_q(x: jnp.ndarray) -> jnp.ndarray:
     return q
 
 
+def _mgs_q(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal basis via modified Gram-Schmidt (pure einsums).
+
+    Slightly weaker numerically than LAPACK QR, but free of custom calls:
+    XLA's SPMD partitioner cannot handle LAPACK custom calls inside a
+    partially-manual ``shard_map`` region (jaxlib 0.4.x aborts with
+    ``IsManualSubgroup`` check failures), so the gradient compressor uses
+    this path.  Ranks are small (<= 16); the unrolled loop is cheap.
+    """
+    xf = x.astype(jnp.float32)
+    cols = []
+    for j in range(xf.shape[-1]):
+        v = xf[..., j]
+        for q in cols:
+            v = v - jnp.sum(q * v, axis=-1, keepdims=True) * q
+        norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+        cols.append(v / jnp.maximum(norm, 1e-12))
+    return jnp.stack(cols, axis=-1)
+
+
 def power_iteration(
     x: jnp.ndarray,
     rank: int,
     iters: int = 4,
     key: jax.Array | None = None,
+    orthonormalizer: str = "qr",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Approximate top-``rank`` factors of ``x`` [..., n, d].
 
     Returns (A [..., n, rank], B [..., d, rank]) with ``A @ Bᵀ ≈ x_r``.
     Follows Algorithm 2: QR on B entering the final sweep, QR on A after the
     final ``A = X B``, then ``B = Xᵀ A`` carries the singular values.
+    ``orthonormalizer="mgs"`` swaps LAPACK QR for Gram-Schmidt — required
+    inside manual ``shard_map`` regions (see :func:`_mgs_q`).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    ortho = _mgs_q if orthonormalizer == "mgs" else _batched_qr_q
     n, d = x.shape[-2], x.shape[-1]
     lead = x.shape[:-2]
     xf = x.astype(jnp.float32)
@@ -51,10 +75,10 @@ def power_iteration(
     for l in range(iters):
         last = l == iters - 1
         if last:
-            b = _batched_qr_q(b)
+            b = ortho(b)
         a = jnp.einsum("...nd,...dr->...nr", xf, b)
         if last:
-            a = _batched_qr_q(a)
+            a = ortho(a)
         b = jnp.einsum("...nd,...nr->...dr", xf, a)
     return a, b
 

@@ -1,0 +1,299 @@
+"""SPMD partitioning rules for params, optimizer state, batches, and caches.
+
+Everything here produces :class:`~jax.sharding.PartitionSpec` pytrees (or
+:class:`~jax.sharding.NamedSharding` pytrees via :func:`shardings_for`);
+nothing touches device state, so the module is safe to import before jax
+initializes its backends (the dry-run forces a 512-device topology first).
+
+Design rules:
+
+* **Proposals, then legalization.**  The per-leaf rules below *propose* a
+  layout (megatron-style column/row splits for projections, vocab-split
+  embeddings, batch/heads splits for GEAR cache buffers); every proposal is
+  passed through :func:`fit_spec`, which checks divisibility against the
+  concrete shape and the live mesh and migrates / shrinks / drops axes that
+  do not fit.  Call sites therefore never have to special-case "the smoke
+  config has 2 kv heads but the mesh has 4 model shards".
+* **Mesh-shape ducks.**  ``fit_spec`` only reads ``mesh.shape`` (a mapping
+  of axis name to size), so tests can pass a stub instead of building a
+  real device mesh.
+* **Layout, not semantics.**  Under ``jit`` a sharding is a layout hint;
+  any legal spec computes the same values.  Migrating a split to a
+  different dim (e.g. vocab -> d_model when the vocab is prime) is
+  therefore always safe, and :func:`cache_pspecs` opts out of migration
+  only to keep cache layouts predictable across policies.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import MODEL, dp_axes
+
+__all__ = [
+    "fit_spec",
+    "param_pspecs",
+    "zero1_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "shardings_for",
+]
+
+
+# ---------------------------------------------------------------------------
+# Spec legalization
+
+
+def _axes_of(entry) -> tuple[str, ...]:
+    """Normalize one PartitionSpec entry to a tuple of axis names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _entry_of(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def _longest_fitting_prefix(axes: tuple[str, ...], dim: int,
+                            mesh_shape: dict) -> tuple[str, ...]:
+    """Longest prefix of ``axes`` whose combined size divides ``dim``.
+
+    A zero-size dim divides everything (0 % n == 0), matching XLA: sharding
+    an empty dim is legal and free.
+    """
+    for end in range(len(axes), 0, -1):
+        prefix = axes[:end]
+        if dim % math.prod(mesh_shape[a] for a in prefix) == 0:
+            return prefix
+    return ()
+
+
+def fit_spec(pspec: P, shape: Sequence[int], mesh, *, migrate: bool = True) -> P:
+    """Legalize ``pspec`` against a concrete ``shape`` on ``mesh``.
+
+    For each sharded dim whose size the assigned mesh axes do not divide:
+
+    1. keep the longest prefix of the axis group that still divides the dim
+       (a multi-axis group degrades gracefully instead of all-or-nothing),
+    2. migrate the remaining axes to the first unsharded dim they divide
+       (unless ``migrate=False``),
+    3. drop whatever still does not fit (replicate).
+
+    Axis names absent from the mesh are dropped up front; specs shorter
+    than ``len(shape)`` are padded with ``None``.  The result is always a
+    spec ``jax.NamedSharding(mesh, spec)`` accepts for ``shape``.
+    """
+    mesh_shape = dict(mesh.shape)
+    entries = [_axes_of(e) for e in tuple(pspec)]
+    if len(entries) > len(shape):
+        raise ValueError(f"spec {pspec} has more entries than shape {tuple(shape)}")
+    entries += [()] * (len(shape) - len(entries))
+    entries = [tuple(a for a in e if a in mesh_shape) for e in entries]
+
+    out: list[tuple[str, ...]] = [()] * len(shape)
+    used: set[str] = set()
+    homeless: list[tuple[str, ...]] = []
+    for i, axes in enumerate(entries):
+        if not axes:
+            continue
+        keep = _longest_fitting_prefix(axes, shape[i], mesh_shape)
+        out[i] = keep
+        used.update(keep)
+        rest = axes[len(keep):]
+        if rest:
+            homeless.append(rest)
+
+    if migrate:
+        queue = list(homeless)
+        while queue:
+            axes = tuple(a for a in queue.pop(0) if a not in used)
+            if not axes:
+                continue
+            free = [i for i in range(len(shape)) if not out[i]]
+            # prefer a dim that takes the whole group, else the best prefix
+            target, placed = None, ()
+            for i in free:
+                fit = _longest_fitting_prefix(axes, shape[i], mesh_shape)
+                if fit == axes:
+                    target, placed = i, fit
+                    break
+                if len(fit) > len(placed):
+                    target, placed = i, fit
+            if target is None or not placed:
+                continue
+            out[target] = placed
+            used.update(placed)
+            rest = axes[len(placed):]
+            if rest:  # a partially-placed group keeps looking for a home
+                queue.append(rest)
+
+    return P(*[_entry_of(e) for e in out])
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+    return names
+
+
+# Column-split projections: shard the output features (last dim) over MODEL.
+_COL_SPLIT = {
+    "wq", "wk", "wv", "wg", "wr",          # attention / rwkv time-mix
+    "w_up", "w_gate",                       # mlp + moe expert up/gate
+    "w_in", "w_bcdt",                       # ssm in-projections
+    "mix_lora_a",                           # rwkv token-shift lora
+    "lm_head",
+}
+# Row-split projections: shard the input features (second-to-last dim) over
+# MODEL, so the matmul contracts over the sharded dim (megatron pairing).
+_ROW_SPLIT = {"wo", "w_down", "w_out"}
+
+
+def _param_rule(names: list[str], shape: tuple[int, ...]) -> list:
+    """Propose per-dim mesh axes for one param leaf.
+
+    Leaves that live under ``blocks`` carry a leading layer-stack dim [R];
+    all rules therefore address trailing dims (negative indices).
+    """
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    nd = len(shape)
+    ent: list = [None] * nd
+    if nd < 2:
+        return ent  # norms, biases, per-head scalars: replicate
+    if name == "embed":
+        ent[nd - 2] = MODEL  # vocab dim ([V, d] text, [K, V, d] audio)
+        return ent
+    # rwkv channel-mix wv is the down projection [ff, d] (wv elsewhere is a
+    # column-split attention projection).
+    row = name in _ROW_SPLIT or (parent == "cm" and name == "wv")
+    if row:
+        ent[nd - 2] = MODEL
+    elif name in _COL_SPLIT:
+        ent[nd - 1] = MODEL
+    return ent
+
+
+def param_pspecs(cfg, params: Any, mesh) -> Any:
+    """Model-parallel PartitionSpec pytree for a parameter pytree.
+
+    Attention/MLP projections get megatron column/row splits, MoE expert
+    stacks split on the expert hidden dim, embeddings on the vocab dim —
+    each legalized against the actual leaf shape, so ragged dims (prime
+    vocab, few kv heads) fall back to a divisible dim or replication.
+    """
+    del cfg  # rules are name/shape driven; cfg kept for API stability
+
+    def spec(path, leaf):
+        ent = _param_rule(_path_names(path), leaf.shape)
+        return fit_spec(P(*ent), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def zero1_pspecs(cfg, params: Any, mesh) -> Any:
+    """ZeRO-1 specs for optimizer moments: param spec + a data-axes split.
+
+    Each moment leaf keeps its model-parallel layout and is additionally
+    sharded over the data-parallel axes (``pod`` folds into DP) on its
+    largest replicated dim, so Adam moments cost ``1/|dp|`` of the memory
+    of the replicated baseline.  Leaves with no divisible dim stay at the
+    param spec — the checkpoint layer stores global arrays either way.
+    """
+    base = param_pspecs(cfg, params, mesh)
+    dp = dp_axes(mesh)
+    if not dp:
+        return base
+    dp_size = math.prod(dict(mesh.shape)[a] for a in dp)
+
+    def add_dp(leaf, ps):
+        entries = [_axes_of(e) for e in tuple(ps)]
+        entries += [()] * (len(leaf.shape) - len(entries))
+        free = [i for i, e in enumerate(entries) if not e]
+        for i in sorted(free, key=lambda i: -leaf.shape[i]):
+            if leaf.shape[i] % dp_size == 0 and leaf.shape[i] > 0:
+                entries[i] = tuple(dp)
+                break
+        return fit_spec(P(*[_entry_of(e) for e in entries]), leaf.shape, mesh,
+                        migrate=False)
+
+    return jax.tree.map(add_dp, params, base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch + cache rules
+
+
+def batch_pspecs(cfg, batch: Any, mesh) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the DP axes."""
+    del cfg
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        ent = [None] * leaf.ndim
+        if dp and leaf.ndim:
+            ent[0] = tuple(dp)
+        return fit_spec(P(*[e if e else None for e in ent]), leaf.shape, mesh,
+                        migrate=False)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cfg, cache_abs: Any, mesh, batch: int) -> Any:
+    """GEAR-aware layouts for the serving cache pytree.
+
+    Cache leaves are stacked over layer-pattern repeats: ``[R, B, H, ...]``
+    for the quantized pack / scale / zero arrays, low-rank A/B factors,
+    outlier COO value+index buffers, and the fp16 streaming buffer (RWKV /
+    SSM states are ``[R, B, ...]``).  The repeat dim R is scanned over and
+    stays replicated; the batch dim shards over the DP axes and the kv-head
+    dim over MODEL.  ``migrate=False``: where a dim does not divide (e.g. 2
+    kv heads on a 4-way model axis) the leaf is replicated on that dim
+    rather than sharded somewhere surprising — chunk/COO index arithmetic
+    stays position-local either way, but layouts stay uniform across the
+    policy zoo (quant-only, +lowrank, +sparse, fp16, window).
+    """
+    dp = dp_axes(mesh)
+    kv_heads = cfg.num_kv_heads
+
+    def spec(leaf):
+        shape = leaf.shape
+        ent: list = [None] * len(shape)
+        if len(shape) >= 3 and shape[1] == batch:
+            if dp:
+                ent[1] = tuple(dp)
+            if len(shape) >= 4 and shape[2] == kv_heads:
+                ent[2] = MODEL
+        return fit_spec(P(*ent), shape, mesh, migrate=False)
+
+    return jax.tree.map(spec, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# Spec -> sharding
+
+
+def shardings_for(mesh, pspecs: Any) -> Any:
+    """Map a PartitionSpec pytree to a NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -28,11 +28,12 @@ class Model:
 
     # -- training ------------------------------------------------------------
     def loss_fn(self, params, batch: dict, remat: bool = False,
-                remat_policy: str = "full"):
+                remat_policy: str = "full", unroll_layers: bool = False):
         """Next-token cross-entropy.  Returns (loss, metrics)."""
         cfg = self.cfg
         logits, aux = tfm.forward(cfg, params, batch, mode="train", remat=remat,
-                                  remat_policy=remat_policy)
+                                  remat_policy=remat_policy,
+                                  unroll_layers=unroll_layers)
         if cfg.modality == "audio":
             labels = batch["tokens"][:, 1:, :]                  # [B, S-1, K]
             lg = logits[:, :-1]                                 # [B, S-1, K, V]

@@ -253,11 +253,17 @@ def _kv_to_cache(cfg: ModelConfig, kind, kv, policy, batch, capacity, dtype):
 def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
             policy: CompressionPolicy | None = None, capacity: int = 0,
             remat: bool = False, remat_policy: str = "full",
-            q_chunk_target: int = 512, cache_dtype=jnp.bfloat16):
+            q_chunk_target: int = 512, cache_dtype=jnp.bfloat16,
+            unroll_layers: bool = False):
     """Full-sequence forward.
 
     mode="train": returns (logits, aux_loss)
     mode="prefill": returns (logits_last [B, 1, vocab...], caches, aux)
+
+    ``unroll_layers`` fully unrolls the layer-stack scan.  Needed inside
+    (partially) manual ``shard_map`` regions, where XLA's SPMD partitioner
+    cannot handle while loops (the PowerSGD train step); everywhere else
+    the scan keeps compile time O(pattern).
     """
     x = embed_tokens(cfg, params, batch)
     B, S, _ = x.shape
@@ -284,7 +290,8 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
     else:
         body = unit_body
     (x, aux), kv_stacks = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                       params["blocks"])
+                                       params["blocks"],
+                                       unroll=cfg.pattern_repeats if unroll_layers else 1)
     x = apply_norm(x, params["final_norm"], cfg.norm)
 
     if mode == "train":

@@ -53,7 +53,11 @@ def compressed_psum(grads: Any, ef: Any, cfg: CompressorConfig, key: jax.Array):
     MUST be called inside shard_map with ``cfg.axis`` a manual axis.
     Returns (mean grads, new error-feedback state, bytes metrics).
     """
-    n_dev = jax.lax.axis_size(cfg.axis)
+    # jax.lax.axis_size is missing on older jax; psum(1) is the same number.
+    if hasattr(jax.lax, "axis_size"):
+        n_dev = jax.lax.axis_size(cfg.axis)
+    else:
+        n_dev = jax.lax.psum(1, cfg.axis)
     exact_bytes = jnp.zeros((), jnp.float32)
     comp_bytes = jnp.zeros((), jnp.float32)
 
@@ -68,7 +72,8 @@ def compressed_psum(grads: Any, ef: Any, cfg: CompressorConfig, key: jax.Array):
             continue
         gm = _as_matrix(g.astype(jnp.float32)) + _as_matrix(e)
         a, b = lowrank.power_iteration(gm, cfg.rank, cfg.power_iters,
-                                       jax.random.fold_in(key, i))
+                                       jax.random.fold_in(key, i),
+                                       orthonormalizer="mgs")
         a = jax.lax.pmean(a, cfg.axis)
         b = jax.lax.pmean(b, cfg.axis)
         approx = lowrank.apply_lowrank(a, b)

@@ -25,6 +25,7 @@ from repro.ckpt import checkpoint as ckpt_lib
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, make_batch
 from repro.dist import sharding as shd
+from repro.dist.compat import manual_shard_map
 from repro.launch.mesh import POD, dp_axes
 from repro.models.model import Model
 from repro.optim.adamw import adamw_update
@@ -42,18 +43,39 @@ def _microbatch(batch: Any, m: int, i: jnp.ndarray) -> Any:
     return jax.tree.map(slice_mb, batch)
 
 
-def _accum_grads(model: Model, params: Any, batch: Any, run: RunConfig):
-    """Mean loss/grads over ``run.microbatches`` sequential microbatches."""
+def _accum_grads(model: Model, params: Any, batch: Any, run: RunConfig,
+                 shard_map_safe: bool = False):
+    """Mean loss/grads over ``run.microbatches`` sequential microbatches.
+
+    ``shard_map_safe`` avoids ``lax.scan`` while-loops entirely (unrolled
+    layer stack, Python-loop microbatches): XLA's SPMD partitioner aborts
+    on while loops inside partially-manual shard_map regions (jaxlib
+    0.4.x), which is where the PowerSGD step runs.
+    """
     m = run.microbatches
 
     def loss_fn(p, mb):
         loss, metrics = model.loss_fn(p, mb, remat=run.remat,
-                                      remat_policy=run.remat_policy)
+                                      remat_policy=run.remat_policy,
+                                      unroll_layers=shard_map_safe)
         return loss, metrics
 
     if m == 1:
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return loss, metrics, grads
+
+    if shard_map_safe:
+        loss_sum = jnp.zeros(())
+        grads_sum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        metrics = None
+        for i in range(m):
+            mb = _microbatch(batch, m, jnp.asarray(i))
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            grads_sum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     grads_sum, grads)
+            loss_sum = loss_sum + loss
+        grads = jax.tree.map(lambda g: g / m, grads_sum)
+        return loss_sum / m, metrics, grads
 
     def body(carry, i):
         loss_acc, grads_acc = carry
@@ -90,7 +112,8 @@ def make_train_step(model: Model, mesh, run: RunConfig,
 
         def step(state: TrainState, batch):
             def podwise(params, ef, pod_batch):
-                loss, metrics, grads = _accum_grads(model, params, pod_batch, run)
+                loss, metrics, grads = _accum_grads(model, params, pod_batch, run,
+                                                    shard_map_safe=True)
                 key = jax.random.fold_in(jax.random.PRNGKey(17), state.step)
                 grads, new_ef, cbytes = compressed_psum(grads, ef, ccfg, key)
                 loss = jax.lax.pmean(loss, POD)
@@ -98,9 +121,8 @@ def make_train_step(model: Model, mesh, run: RunConfig,
 
             in_specs = (P(), P(), P(POD))
             out_specs = (P(), P(), P(), P(), P())
-            loss, metrics, grads, new_ef, cbytes = jax.shard_map(
-                podwise, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                axis_names={POD}, check_vma=False,
+            loss, metrics, grads, new_ef, cbytes = manual_shard_map(
+                podwise, mesh, in_specs, out_specs, manual_axes={POD},
             )(state.params, state.ef, batch)
             new_state, metrics = opt_update(state, grads, loss, metrics, ef=new_ef)
             metrics.update({k: v for k, v in cbytes.items()})
@@ -123,8 +145,7 @@ def train_state_shardings(cfg: ModelConfig, mesh, state: Any, run: RunConfig):
     ef_spec = jax.tree.map(lambda x: P(*(None,) * x.ndim), state.ef) if state.ef is not None else None
 
     def to_shard(tree):
-        return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree,
-                            is_leaf=lambda x: isinstance(x, P))
+        return shd.shardings_for(mesh, tree)
 
     from repro.train.state import TrainState as TS
     from repro.optim.adamw import AdamWState

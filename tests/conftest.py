@@ -9,6 +9,19 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    # Also registered in pyproject.toml; kept here so a bare `pytest tests/`
+    # without the ini file still knows the lanes.
+    config.addinivalue_line(
+        "markers",
+        "slow: compile-heavy / subprocess test, excluded from the CI smoke "
+        'lane (-m "not slow")')
+    config.addinivalue_line(
+        "markers",
+        "multidevice: re-execs in a subprocess with a fake multi-device CPU "
+        "topology (xla_force_host_platform_device_count)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -30,26 +30,74 @@ def run_subprocess(body: str, devices: int = 4) -> str:
     return out.stdout
 
 
+class FakeMesh:
+    shape = {"data": 4, "model": 4}
+
+
 class TestFitSpec:
     def test_migrates_axis(self):
-        class FakeMesh:
-            shape = {"data": 4, "model": 4}
         ps = fit_spec(P("model", None), (122753, 2304), FakeMesh())
         assert tuple(ps) == (None, "model")
 
     def test_drops_axis(self):
-        class FakeMesh:
-            shape = {"data": 4, "model": 4}
         ps = fit_spec(P("model",), (7,), FakeMesh())
         assert tuple(ps) == (None,)
 
     def test_keeps_legal(self):
-        class FakeMesh:
-            shape = {"data": 4, "model": 4}
         ps = fit_spec(P(None, "model"), (8, 16), FakeMesh())
         assert tuple(ps) == (None, "model")
 
+    # --- edge cases beyond the seed's three -------------------------------
 
+    def test_multi_axis_group_kept_when_divisible(self):
+        ps = fit_spec(P(("data", "model"), None), (16, 4), FakeMesh())
+        assert tuple(ps) == (("data", "model"), None)
+
+    def test_multi_axis_group_splits_and_migrates(self):
+        # dim0 (8) only fits the "data" prefix (4); the leftover "model"
+        # axis migrates to dim1 (64).
+        ps = fit_spec(P(("data", "model"), None), (8, 64), FakeMesh())
+        assert tuple(ps) == ("data", "model")
+
+    def test_multi_axis_group_drops_when_nothing_fits(self):
+        ps = fit_spec(P(("data", "model"),), (7,), FakeMesh())
+        assert tuple(ps) == (None,)
+
+    def test_partially_migrated_group_rehomes_its_remainder(self):
+        # dim0 fits nothing; "data" migrates to dim1 and the leftover
+        # "model" keeps looking and lands on dim2.
+        ps = fit_spec(P(("data", "model"), None, None), (2, 4, 4), FakeMesh())
+        assert tuple(ps) == (None, "data", "model")
+
+    def test_zero_size_dim_accepts_any_sharding(self):
+        ps = fit_spec(P("model", None), (0, 5), FakeMesh())
+        assert tuple(ps) == ("model", None)
+
+    def test_mesh_axes_absent_from_spec_are_fine(self):
+        class PodMesh:
+            shape = {"pod": 2, "data": 4, "model": 4}
+        ps = fit_spec(P(None, "model"), (8, 16), PodMesh())
+        assert tuple(ps) == (None, "model")
+
+    def test_spec_axis_unknown_to_mesh_is_dropped(self):
+        ps = fit_spec(P("tensor", None), (8, 8), FakeMesh())
+        assert tuple(ps) == (None, None)
+
+    def test_short_spec_padded_to_rank(self):
+        ps = fit_spec(P("model"), (8, 6), FakeMesh())
+        assert tuple(ps) == ("model", None)
+
+    def test_no_migration_when_disabled(self):
+        ps = fit_spec(P("model", None), (7, 16), FakeMesh(), migrate=False)
+        assert tuple(ps) == (None, None)
+
+    def test_overlong_spec_rejected(self):
+        with pytest.raises(ValueError):
+            fit_spec(P("model", None), (16,), FakeMesh())
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_train_restore_deterministic(tmp_path):
     """6 steps straight == 3 steps + restart + 3 steps (bitwise metrics)."""
     out = run_subprocess(f"""
@@ -84,6 +132,8 @@ def test_train_restore_deterministic(tmp_path):
     assert diff < 1e-5
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_elastic_rescale_restore(tmp_path):
     """Checkpoint on a 2×2 mesh restores onto a 4×1 mesh (mesh-independent)."""
     run_subprocess(f"""
@@ -117,6 +167,8 @@ def test_elastic_rescale_restore(tmp_path):
     """)
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_powersgd_runs_on_pod_mesh(tmp_path):
     run_subprocess(f"""
         import dataclasses
@@ -141,6 +193,8 @@ def test_powersgd_runs_on_pod_mesh(tmp_path):
     """, devices=8)
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_serving_on_mesh(tmp_path):
     run_subprocess("""
         import jax, jax.numpy as jnp, dataclasses

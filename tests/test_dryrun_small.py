@@ -9,9 +9,13 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_dryrun_machinery_small_mesh(tmp_path):
     body = textwrap.dedent("""
         import os

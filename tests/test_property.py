@@ -6,6 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; CI's full lane installs it via "
+           "`pip install -e .[test]`")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import gear, metrics, packing, quant, outlier
