@@ -1,4 +1,4 @@
-"""Paper Fig 3a (time breakdown) + Fig 3c (throughput).
+"""Paper Fig 3a (time breakdown) + Fig 3c (throughput) + scheduler modes.
 
 Wall-clock GPU throughput is not reproducible on CPU, so this bench reports
 BOTH:
@@ -7,15 +7,22 @@ BOTH:
       GEAR's gain comes from the larger feasible batch at equal memory —
       exactly the mechanism behind the paper's 2.1×–5.07×;
   (2) measured CPU-relative step times for the compression components
-      (Fig 3a): quantization / low-rank / sparse vs model forward.
+      (Fig 3a): quantization / low-rank / sparse vs model forward;
+  (3) wave vs slot-level continuous batching on a mixed-length workload —
+      relative tokens/s of the two scheduler modes (CPU-relative but the
+      ratio is scheduling-structural: waves decode every slot to the wave's
+      max budget, continuous splices the next request the moment a slot
+      frees).  ``--smoke --json`` runs only (3) for the CI artifact.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, kv_like, timeit
 from benchmarks.bench_memory import kv_bytes_per_seq, max_batch, N_IN, N_GEN, GB
@@ -94,8 +101,56 @@ def cpu_relative_decode(key):
     return times
 
 
-def run(key=None):
+def _mixed_requests(n_reqs: int, prompt_pad: int, vocab: int, seed: int = 0):
+    """Mixed-length synthetic workload: budgets cycle 8..64."""
+    from repro.serving.scheduler import Request
+    rng = np.random.RandomState(seed)
+    budgets = [8, 16, 32, 64]
+    return [Request(rid=i,
+                    tokens=rng.randint(1, vocab, size=rng.randint(4, prompt_pad + 1)),
+                    max_new_tokens=budgets[i % len(budgets)])
+            for i in range(n_reqs)]
+
+
+def wave_vs_continuous(key, n_reqs: int = 12, batch: int = 4):
+    """Tokens/s of wave vs slot-level continuous batching (same workload)."""
+    from repro.serving.scheduler import Scheduler
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"),
+                              buffer_size=16, rank=2, rank_decode=2)
+    prompt_pad = 16
+    eng = Engine(m, params, EngineConfig(batch=batch, capacity=96, policy=pol,
+                                         eos_id=-1))
+
+    def drive(mode: str, warm: bool) -> float:
+        sched = Scheduler(eng, prompt_pad=prompt_pad)
+        for r in _mixed_requests(2 * batch if warm else n_reqs,
+                                 prompt_pad, cfg.vocab_size):
+            sched.submit(r)
+        t0 = time.time()
+        results = getattr(sched, mode)()
+        wall = time.time() - t0
+        return sum(len(r.tokens) for r in results) / wall
+
+    out = {}
+    for mode, tag in (("run", "wave"), ("run_continuous", "continuous")):
+        drive(mode, warm=True)  # compile warmup so tokens/s is steady-state
+        out[tag] = drive(mode, warm=False)
+        emit(f"throughput_sched/{tag}", 0.0, f"tok_per_s={out[tag]:.1f}")
+    ratio = out["continuous"] / out["wave"]
+    emit("throughput_sched/continuous_over_wave", 0.0,
+         f"{ratio:.2f}x (mixed budgets 8-64, batch={batch}, n={n_reqs})")
+    assert ratio >= 1.0, f"continuous batching slower than waves: {ratio:.2f}x"
+    return ratio
+
+
+def run(key=None, smoke: bool = False):
     key = key if key is not None else jax.random.PRNGKey(0)
+    sched_ratio = wave_vs_continuous(key)
+    if smoke:
+        return sched_ratio
     cfg = get_config("llama2-7b")
     ratio = fig3c(cfg)
     assert 1.5 < ratio < 8.0, ratio
@@ -105,4 +160,15 @@ def run(key=None):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="only the wave-vs-continuous scheduler comparison")
+    ap.add_argument("--json", default=None,
+                    help="also write the emitted rows to this JSON file")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)

@@ -12,6 +12,9 @@ from repro.core.cache import (
     append_token,
     attend,
     dense_kv,
+    splice_slot,
+    reset_slot,
+    prefill_into_slot,
 )
 from repro.core.metrics import kv_size_breakdown, kv_size_fraction
 
@@ -20,5 +23,6 @@ __all__ = [
     "CompressedMatrix", "compress_matrix", "decompress_matrix", "approx_error",
     "CacheConfig", "GEARLayerCache", "FP16LayerCache", "WindowLayerCache",
     "init_layer_cache", "prefill_layer_cache", "append_token", "attend", "dense_kv",
+    "splice_slot", "reset_slot", "prefill_into_slot",
     "kv_size_breakdown", "kv_size_fraction",
 ]

@@ -29,9 +29,17 @@ per = 32 // bits packed lanes):
   k_b       bf16  [B, H, C, Dh, r]       v_b       bf16  [B, H, C, Dh, r]
   k_sp_val  bf16  [B, H, C, Dh, 2ks]     v_sp_val  bf16  [B, H, S, 2kv]
   k_sp_idx  int32   (same)               v_sp_idx  int32   (same)
-  buf_k/buf_v bf16 [B, H, n_b, Dh]       length    int32 []
+  buf_k/buf_v bf16 [B, H, n_b, Dh]       length    int32 [B]
 
 (for the per-token-group baseline backbone K uses the V layout.)
+
+**Per-slot state.**  ``length`` (and the window cache's ``pos``) carry a
+leading batch dim: every batch row is an independent *slot* that may hold a
+different request at a different phase of its life.  All decode-time writes
+(:func:`append_token`) address each slot at its own offset, and all attend
+masks are per-slot — this is what makes slot-level continuous batching
+(:func:`prefill_into_slot` / :func:`reset_slot` / :func:`splice_slot`) a pure
+batch-dim operation.  The slot-splice protocol is specified in DESIGN.md.
 """
 
 from __future__ import annotations
@@ -57,6 +65,9 @@ __all__ = [
     "append_token",
     "attend",
     "dense_kv",
+    "splice_slot",
+    "reset_slot",
+    "prefill_into_slot",
 ]
 
 NEG_INF = -1e30
@@ -135,7 +146,7 @@ class WindowLayerCache:
     """Ring buffer of the most recent ``window`` tokens (fp16)."""
     k: Any
     v: Any
-    pos: Any      # int32 [window] absolute position held in each slot (-1 empty)
+    pos: Any      # int32 [B, window] absolute position held per ring slot (-1 empty)
     length: Any
 
 
@@ -171,15 +182,15 @@ def init_layer_cache(cfg: CacheConfig, dtype=jnp.bfloat16):
         return FP16LayerCache(
             k=jnp.zeros((B, H, S, Dh), dtype),
             v=jnp.zeros((B, H, S, Dh), dtype),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((B,), jnp.int32),
         )
     if cfg.kind == "window":
         W = cfg.window
         return WindowLayerCache(
             k=jnp.zeros((B, H, W, Dh), dtype),
             v=jnp.zeros((B, H, W, Dh), dtype),
-            pos=jnp.full((W,), -1, jnp.int32),
-            length=jnp.zeros((), jnp.int32),
+            pos=jnp.full((B, W), -1, jnp.int32),
+            length=jnp.zeros((B,), jnp.int32),
         )
     pol = cfg.policy
     per = 32 // pol.bits
@@ -209,8 +220,27 @@ def init_layer_cache(cfg: CacheConfig, dtype=jnp.bfloat16):
         v_sp_idx=zi(B, H, S, 2 * kvo) if use_sp else None,
         buf_k=z(B, H, pol.buffer_size, Dh),
         buf_v=z(B, H, pol.buffer_size, Dh),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((B,), jnp.int32),
     )
+
+
+def _slot_rows_update(dst: jnp.ndarray, vals: jnp.ndarray, start: jnp.ndarray,
+                      need: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Write ``vals`` [B, H, r, ...] into ``dst`` [B, H, R, ...] at per-slot
+    row offset ``start`` [B] along axis 2.
+
+    Slots with ``need[b]`` False (and slots whose rows would run past the end
+    of ``dst``) are redirected out of bounds, which the scatter drops — the
+    mechanism that lets one batched write serve slots at different phases.
+    """
+    B, r, R = dst.shape[0], vals.shape[2], dst.shape[2]
+    rows = start.astype(jnp.int32)[:, None] + jnp.arange(r, dtype=jnp.int32)[None, :]
+    if need is not None:
+        rows = jnp.where(need[:, None], rows, R)
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    # advanced indices at axes (0, 2) move to the front: update is [B, r, H, ...]
+    return dst.at[bidx, :, rows].set(
+        jnp.moveaxis(vals, 2, 1).astype(dst.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -254,11 +284,13 @@ def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
                         key: jax.Array | None = None):
     """Fill a fresh layer cache from prefill K/V [B, H, n, Dh]."""
     n = k.shape[2]
+    B = k.shape[0]
+    full_len = jnp.full((B,), n, jnp.int32)
     if cfg.kind == "fp16":
         return FP16LayerCache(
             k=jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
             v=jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
-            length=jnp.asarray(n, jnp.int32),
+            length=full_len,
         )
     if cfg.kind == "window":
         W = cfg.window
@@ -270,8 +302,8 @@ def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
         slots = pos_vals % W
         knew = cache.k.at[:, :, slots, :].set(ks.astype(cache.k.dtype))
         vnew = cache.v.at[:, :, slots, :].set(vs.astype(cache.v.dtype))
-        pos = cache.pos.at[slots].set(pos_vals)
-        return WindowLayerCache(k=knew, v=vnew, pos=pos, length=jnp.asarray(n, jnp.int32))
+        pos = cache.pos.at[:, slots].set(pos_vals[None, :])
+        return WindowLayerCache(k=knew, v=vnew, pos=pos, length=full_len)
 
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -318,28 +350,34 @@ def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
             upd["buf_k"], k[:, :, n_full:, :].astype(upd["buf_k"].dtype), (0, 0, 0, 0))
         upd["buf_v"] = jax.lax.dynamic_update_slice(
             upd["buf_v"], v[:, :, n_full:, :].astype(upd["buf_v"].dtype), (0, 0, 0, 0))
-    upd["length"] = jnp.asarray(n, jnp.int32)
+    upd["length"] = full_len
     return GEARLayerCache(**upd)
 
 
 def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,
                  key: jax.Array | None = None):
-    """Append one token's K/V [B, H, Dh]; compress the buffer when full."""
+    """Append one token's K/V [B, H, Dh] per slot; compress full buffers.
+
+    Each slot advances at its own ``length[b]``: writes land at per-slot
+    offsets, and a slot whose streaming buffer just filled gets its chunk
+    compressed and scattered into packed storage (slots not at a chunk
+    boundary drop their writes).  Past capacity the packed / fp16 / window
+    writes drop, but the GEAR streaming buffer keeps ring-wrapping, so a
+    live request must never outgrow capacity (the scheduler rejects it at
+    submit time); an *idle* slot may keep riding the batched step with
+    garbage state until it is respliced, since a splice rewrites the row.
+    """
     if cfg.kind == "fp16":
-        idx = cache.length
-        knew = jax.lax.dynamic_update_slice(
-            cache.k, k_t[:, :, None, :].astype(cache.k.dtype), (0, 0, idx, 0))
-        vnew = jax.lax.dynamic_update_slice(
-            cache.v, v_t[:, :, None, :].astype(cache.v.dtype), (0, 0, idx, 0))
+        knew = _slot_rows_update(cache.k, k_t[:, :, None, :], cache.length)
+        vnew = _slot_rows_update(cache.v, v_t[:, :, None, :], cache.length)
         return FP16LayerCache(k=knew, v=vnew, length=cache.length + 1)
     if cfg.kind == "window":
         W = cfg.window
         slot = cache.length % W
-        knew = jax.lax.dynamic_update_slice(
-            cache.k, k_t[:, :, None, :].astype(cache.k.dtype), (0, 0, slot, 0))
-        vnew = jax.lax.dynamic_update_slice(
-            cache.v, v_t[:, :, None, :].astype(cache.v.dtype), (0, 0, slot, 0))
-        pos = jax.lax.dynamic_update_slice(cache.pos, cache.length[None], (slot,))
+        knew = _slot_rows_update(cache.k, k_t[:, :, None, :], slot)
+        vnew = _slot_rows_update(cache.v, v_t[:, :, None, :], slot)
+        B = cache.pos.shape[0]
+        pos = cache.pos.at[jnp.arange(B), slot].set(cache.length)
         return WindowLayerCache(k=knew, v=vnew, pos=pos, length=cache.length + 1)
 
     pol = cfg.policy
@@ -347,58 +385,56 @@ def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,
     if key is None:
         key = jax.random.PRNGKey(0)
     buf_pos = cache.length % nb
-    buf_k = jax.lax.dynamic_update_slice(
-        cache.buf_k, k_t[:, :, None, :].astype(cache.buf_k.dtype), (0, 0, buf_pos, 0))
-    buf_v = jax.lax.dynamic_update_slice(
-        cache.buf_v, v_t[:, :, None, :].astype(cache.buf_v.dtype), (0, 0, buf_pos, 0))
+    buf_k = _slot_rows_update(cache.buf_k, k_t[:, :, None, :], buf_pos)
+    buf_v = _slot_rows_update(cache.buf_v, v_t[:, :, None, :], buf_pos)
     cache = dataclasses.replace(cache, buf_k=buf_k, buf_v=buf_v, length=cache.length + 1)
 
     def compress(c):
-        cidx = (c.length - 1) // nb  # chunk index of the buffer just filled
+        # Per-slot chunk of the buffer just filled; slots not at a boundary
+        # compute a throwaway compression whose writes are dropped.
+        need = (c.length % nb == 0) & (c.length > 0) & (c.length <= cfg.capacity)
+        cidx = jnp.maximum(c.length - 1, 0) // nb
         B, H, _, Dh = c.buf_k.shape
         kc = c.buf_k[:, :, None, :, :].astype(jnp.float32)  # [B,H,1,nb,Dh]
         vc = c.buf_v[:, :, None, :, :].astype(jnp.float32)
-        comp = _compress_chunks(cfg, kc, vc, pol.rank_decode,
-                                jax.random.fold_in(key, c.length))
+        # NOTE: the compression key is slot- and step-invariant so that a
+        # request spliced into a live batch reproduces its solo compression
+        # bit-for-bit (see DESIGN.md §splice isolation).
+        comp = _compress_chunks(cfg, kc, vc, pol.rank_decode, key)
         upd = {f.name: getattr(c, f.name) for f in dataclasses.fields(GEARLayerCache)}
         tok0 = cidx * nb
-        upd["k_packed"] = jax.lax.dynamic_update_slice(
-            upd["k_packed"], comp["k_packed"].reshape(B, H, nb, -1)[:, :, :, :],
-            (0, 0, tok0, 0))
-        upd["v_packed"] = jax.lax.dynamic_update_slice(
-            upd["v_packed"], comp["v_packed"].reshape(B, H, nb, -1), (0, 0, tok0, 0))
+        upd["k_packed"] = _slot_rows_update(
+            upd["k_packed"], comp["k_packed"].reshape(B, H, nb, -1), tok0, need)
+        upd["v_packed"] = _slot_rows_update(
+            upd["v_packed"], comp["v_packed"].reshape(B, H, nb, -1), tok0, need)
         for kv in ("k", "v"):
-            scheme, group = (cfg.k_scheme() if kv == "k" else cfg.v_scheme())
             stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
             stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
             rows_per_chunk = stat_s.shape[2]
-            upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(
-                upd[f"{kv}_scale"], stat_s, (0, 0, cidx * rows_per_chunk, 0))
-            upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(
-                upd[f"{kv}_zero"], stat_z, (0, 0, cidx * rows_per_chunk, 0))
+            upd[f"{kv}_scale"] = _slot_rows_update(
+                upd[f"{kv}_scale"], stat_s, cidx * rows_per_chunk, need)
+            upd[f"{kv}_zero"] = _slot_rows_update(
+                upd[f"{kv}_zero"], stat_z, cidx * rows_per_chunk, need)
             if pol.use_lowrank:
                 a = comp[f"{kv}_a"].reshape(B, H, nb, pol.rank)
-                upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(
-                    upd[f"{kv}_a"], a, (0, 0, tok0, 0))
-                upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
-                    upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, cidx, 0, 0))
+                upd[f"{kv}_a"] = _slot_rows_update(upd[f"{kv}_a"], a, tok0, need)
+                upd[f"{kv}_b"] = _slot_rows_update(
+                    upd[f"{kv}_b"], comp[f"{kv}_b"], cidx, need)
             if pol.use_sparse:
                 sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
                 if kv == "v" or cfg.k_scheme()[0] != "per_channel":
                     sv = sv.reshape(B, H, nb, sv.shape[-1])
                     si = si.reshape(B, H, nb, si.shape[-1])
-                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_val"], sv, (0, 0, tok0, 0))
-                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_idx"], si, (0, 0, tok0, 0))
+                    upd[f"{kv}_sp_val"] = _slot_rows_update(upd[f"{kv}_sp_val"], sv, tok0, need)
+                    upd[f"{kv}_sp_idx"] = _slot_rows_update(upd[f"{kv}_sp_idx"], si, tok0, need)
                 else:
-                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_val"], sv, (0, 0, cidx, 0, 0))
-                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_idx"], si, (0, 0, cidx, 0, 0))
+                    upd[f"{kv}_sp_val"] = _slot_rows_update(upd[f"{kv}_sp_val"], sv, cidx, need)
+                    upd[f"{kv}_sp_idx"] = _slot_rows_update(upd[f"{kv}_sp_idx"], si, cidx, need)
         return GEARLayerCache(**upd)
 
-    return jax.lax.cond(cache.length % nb == 0, compress, lambda c: c, cache)
+    any_boundary = jnp.any((cache.length % nb == 0) & (cache.length > 0)
+                           & (cache.length <= cfg.capacity))
+    return jax.lax.cond(any_boundary, compress, lambda c: c, cache)
 
 
 # ---------------------------------------------------------------------------
@@ -471,19 +507,21 @@ def dense_kv(cfg: CacheConfig, cache) -> tuple[jnp.ndarray, jnp.ndarray]:
     if pol.use_sparse:
         k_hat = k_hat + _sparse_dense(cfg, cache.k_sp_val, cache.k_sp_idx, "k")
         v_hat = v_hat + _sparse_dense(cfg, cache.v_sp_val, cache.v_sp_idx, "v")
-    # overlay buffered (uncompressed) tokens
+    # overlay buffered (uncompressed) tokens — per-slot buffer windows
     nb = cfg.chunk
-    n_comp = (cache.length // nb) * nb
+    n_comp = (cache.length // nb) * nb                       # [B]
     tok = jnp.arange(cfg.capacity)
-    buf_slot = tok - n_comp
-    in_buf = (buf_slot >= 0) & (buf_slot < nb) & (tok < cache.length)
+    buf_slot = tok[None, :] - n_comp[:, None]                # [B, S]
+    in_buf = (buf_slot >= 0) & (buf_slot < nb) & (tok[None, :] < cache.length[:, None])
     bslot = jnp.clip(buf_slot, 0, nb - 1)
-    k_buf = jnp.take(cache.buf_k.astype(jnp.float32), bslot, axis=2)
-    v_buf = jnp.take(cache.buf_v.astype(jnp.float32), bslot, axis=2)
-    mask = in_buf[None, None, :, None]
+    k_buf = jnp.take_along_axis(cache.buf_k.astype(jnp.float32),
+                                bslot[:, None, :, None], axis=2)
+    v_buf = jnp.take_along_axis(cache.buf_v.astype(jnp.float32),
+                                bslot[:, None, :, None], axis=2)
+    mask = in_buf[:, None, :, None]
     k_hat = jnp.where(mask, k_buf, k_hat)
     v_hat = jnp.where(mask, v_buf, v_hat)
-    valid = (tok < cache.length)[None, None, :, None]
+    valid = (tok[None, :] < cache.length[:, None])[:, None, :, None]
     return k_hat * valid, v_hat * valid
 
 
@@ -503,8 +541,8 @@ def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     if cfg.kind == "window":
         kf, vf = cache.k.astype(jnp.float32), cache.v.astype(jnp.float32)
         scores = jnp.einsum("bhgd,bhwd->bhgw", qf, kf) * scale
-        valid = (cache.pos >= 0) & (cache.pos < cache.length)
-        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = (cache.pos >= 0) & (cache.pos < cache.length[:, None])  # [B, W]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhgw,bhwd->bhgd", w, vf)
         return out.reshape(B, Hq, Dh).astype(q.dtype)
@@ -512,16 +550,16 @@ def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     if cfg.kind == "fp16" or not use_factored:
         kf, vf = dense_kv(cfg, cache)
         scores = jnp.einsum("bhgd,bhsd->bhgs", qf, kf) * scale
-        valid = jnp.arange(cfg.capacity) < cache.length
-        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = jnp.arange(cfg.capacity)[None, :] < cache.length[:, None]  # [B, S]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhgs,bhsd->bhgd", w, vf)
         return out.reshape(B, Hq, Dh).astype(q.dtype)
 
     pol = cfg.policy
     nb, C, S = cfg.chunk, cfg.n_chunks, cfg.capacity
-    n_comp = (cache.length // nb) * nb
-    n_buf = cache.length - n_comp
+    n_comp = (cache.length // nb) * nb        # [B] per-slot compressed extent
+    n_buf = cache.length - n_comp             # [B] per-slot buffer fill
     cdt = jnp.bfloat16  # dequant/compute dtype; accumulations stay f32
     f32 = jnp.float32
     qc = qf.astype(cdt)
@@ -578,8 +616,10 @@ def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
 
     # --- masks + two-piece online softmax (no concat copy; §Perf iter 5) ----
     neg = jnp.asarray(-1e30, s_bb.dtype)
-    s_bb = jnp.where((jnp.arange(S) < n_comp)[None, None, None, :], s_bb * scale, neg)
-    s_buf = jnp.where((jnp.arange(nb) < n_buf)[None, None, None, :], s_buf * scale, neg)
+    m_bb = (jnp.arange(S)[None, :] < n_comp[:, None])[:, None, None, :]
+    m_buf = (jnp.arange(nb)[None, :] < n_buf[:, None])[:, None, None, :]
+    s_bb = jnp.where(m_bb, s_bb * scale, neg)
+    s_buf = jnp.where(m_buf, s_buf * scale, neg)
     m_all = jnp.maximum(jnp.max(s_bb, axis=-1), jnp.max(s_buf, axis=-1))[..., None]
     e_bb = jnp.exp((s_bb - m_all).astype(f32))
     e_buf = jnp.exp((s_buf - m_all).astype(f32))
@@ -617,3 +657,45 @@ def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     out = out + jnp.einsum("bhgn,bhnd->bhgd", w_buf.astype(cdt),
                            cache.buf_v.astype(cdt), preferred_element_type=f32)
     return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Slot splicing (continuous batching)
+
+
+def splice_slot(full, one, slot, axis: int = 0):
+    """Write a batch-1 cache pytree ``one`` into batch row ``slot`` of ``full``.
+
+    Works on any cache pytree whose leaves carry the batch dim at ``axis``
+    (``axis=0`` for a single layer cache, ``axis=1`` for the engine's
+    repeat-stacked ``[R, B, ...]`` trees — including RWKV/SSM states).
+    ``slot`` may be a traced scalar, so one jitted program serves every slot.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=axis),
+        full, one)
+
+
+def reset_slot(cfg: CacheConfig, cache, slot, dtype=jnp.bfloat16):
+    """Return ``cache`` with batch row ``slot`` back in the empty state.
+
+    Length goes to 0 (and window ``pos`` to -1), so every attend mask treats
+    the slot as empty; stale K/V bytes are also zeroed for hygiene.
+    """
+    one = init_layer_cache(dataclasses.replace(cfg, batch=1), dtype)
+    return splice_slot(cache, one, slot)
+
+
+def prefill_into_slot(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
+                      slot, key: jax.Array | None = None, dtype=jnp.bfloat16):
+    """Prefill one request's K/V [1, H, n, Dh] into batch row ``slot``.
+
+    The single-request cache is built exactly as a batch-1 prefill would
+    build it (same chunking, same compression keys), then spliced over the
+    slot — the cache-level half of the slot-splice protocol (DESIGN.md).
+    """
+    cfg1 = dataclasses.replace(cfg, batch=1)
+    one = prefill_layer_cache(cfg1, init_layer_cache(cfg1, dtype), k, v, key)
+    return splice_slot(cache, one, slot)

@@ -70,7 +70,13 @@ def power_iteration(
     n, d = x.shape[-2], x.shape[-1]
     lead = x.shape[:-2]
     xf = x.astype(jnp.float32)
-    b = jax.random.normal(key, lead + (d, rank), dtype=jnp.float32)
+    # The random init is drawn once at [d, rank] and broadcast over the
+    # leading (batch/head/chunk) dims: each matrix's factors then depend only
+    # on its own data and the key, never on its position in the batch.  The
+    # serving cache relies on this batch-invariance so a request spliced into
+    # a live batch compresses bit-identically to a solo run (DESIGN.md).
+    b = jnp.broadcast_to(jax.random.normal(key, (d, rank), dtype=jnp.float32),
+                         lead + (d, rank))
     a = jnp.zeros(lead + (n, rank), dtype=jnp.float32)
     for l in range(iters):
         last = l == iters - 1

@@ -272,6 +272,17 @@ def cache_pspecs(cfg, cache_abs: Any, mesh, batch: int) -> Any:
     rather than sharded somewhere surprising — chunk/COO index arithmetic
     stays position-local either way, but layouts stay uniform across the
     policy zoo (quant-only, +lowrank, +sparse, fp16, window).
+
+    Slot-splice invariant (continuous batching, DESIGN.md): the engine
+    donates the cache tree and writes one batch row at a traced offset
+    (``dynamic_update_slice_in_dim`` over axis 1) when splicing a request
+    into a freed slot.  That stays legal under SPMD because every leaf
+    either shards axis 1 over exactly the DP axes or replicates it — never a
+    mixed layout.  Per-slot lengths (``length`` [R, B]) fall outside the
+    ``len(shape) >= 3`` rule and stay replicated: the cheap per-slot masks
+    are recomputed on every shard rather than paying a collective; the
+    window cache's ``pos`` [R, B, W] shards its batch dim like the K/V it
+    masks.
     """
     dp = dp_axes(mesh)
     kv_heads = cfg.num_kv_heads

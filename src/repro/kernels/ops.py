@@ -40,6 +40,11 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     q: [B, Hq, Dh] -> [B, Hq, Dh].  Requires the engine layout
     (group == chunk for K; see DESIGN.md) which both recommended policies
     (GEAR-KCVT-4bit, GEAR-KIVI-2bit) satisfy.
+
+    The fused kernel takes ONE shared compressed extent, so this path
+    requires all slots at the same length (wave mode).  Mixed-length
+    continuous batches must use :func:`repro.core.cache.attend`, whose masks
+    are per-slot; per-slot masking inside the kernel is tracked in DESIGN.md.
     """
     pol = cfg.policy
     B, Hq, Dh = q.shape
@@ -48,8 +53,21 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     BH = B * H
     qf = q.astype(jnp.float32).reshape(BH, G, Dh)
     nb = cfg.chunk
-    n_comp = (cache.length // nb) * nb
-    n_buf = cache.length - n_comp
+    length = cache.length  # [B] per-slot lengths; must be uniform here
+    if not isinstance(length, jax.core.Tracer):
+        lens = jax.device_get(length)
+        if lens.min() != lens.max():
+            raise ValueError(
+                "gear_attend requires uniform slot lengths (wave mode); "
+                "mixed-length continuous batches must use "
+                "repro.core.cache.attend")
+    # Under jit the check above cannot raise, so poison the output with NaN
+    # instead of silently attending past shorter slots' valid extent.
+    uniform = jnp.min(length) == jnp.max(length)
+    poison = jnp.where(uniform, 0.0, jnp.nan).astype(jnp.float32)
+    length = jnp.max(length)
+    n_comp = (length // nb) * nb
+    n_buf = length - n_comp
 
     kwargs = dict(bits=pol.bits, chunk=nb, scale_factor=scale)
     lr = dict(
@@ -82,6 +100,7 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     corr = jnp.exp(m - m_tot)
     l_tot = l * corr + jnp.sum(p_buf, axis=-1)
     out = (acc * corr[..., None] + acc_buf) / jnp.maximum(l_tot[..., None], 1e-30)
+    out = out + poison
     return out.reshape(B, Hq, Dh).astype(q.dtype)
 
 

@@ -130,11 +130,15 @@ def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
                      kind: str = "global"):
     """One-token attention against a layer cache.
 
-    x_t: [B, 1, d]; pos: scalar int32 absolute position.
+    x_t: [B, 1, d]; pos: int32 absolute position — scalar (all slots aligned)
+    or [B] (per-slot positions, continuous batching).  Both shapes go through
+    the same per-slot RoPE path so wave-mode and spliced-slot decodes are
+    bit-identical per batch row.
     Returns (out [B, 1, d], new_cache).
     """
     B = x_t.shape[0]
-    q, k, v = _project_qkv(cfg, params, x_t, jnp.asarray(pos)[None], kind)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape((-1, 1)), (B, 1))
+    q, k, v = _project_qkv(cfg, params, x_t, positions, kind)
     k_t = jnp.squeeze(k, axis=1)  # [B, Hkv, Dh]
     v_t = jnp.squeeze(v, axis=1)
     q_t = jnp.squeeze(q, axis=1)  # [B, Hq, Dh]

@@ -65,15 +65,20 @@ def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
 
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """Rotary embedding.  x: [B, S, H, Dh] or [B, S, Dh]; positions: [S]."""
+    """Rotary embedding.  x: [B, S, H, Dh] or [B, S, Dh].
+
+    positions: [S] (shared across the batch) or [B, S] (per-slot positions —
+    the continuous-batching decode path, where every batch row sits at its
+    own absolute position).
+    """
     dh = x.shape[-1]
     freqs = rope_freqs(dh, theta)
-    ang = positions.astype(jnp.float32)[:, None] * freqs   # [S, Dh/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [S, Dh/2] | [B, S, Dh/2]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]                     # -> [1, S, Dh/2]
     if x.ndim == 4:  # head axis present
-        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
-    else:
-        cos, sin = cos[None, :, :], sin[None, :, :]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)

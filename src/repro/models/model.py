@@ -53,12 +53,20 @@ class Model:
     # -- serving ------------------------------------------------------------
     def prefill(self, params, batch: dict, policy: CompressionPolicy,
                 capacity: int):
+        """Full-prompt forward producing per-layer caches.
+
+        Works for any batch size; the serving engine also calls it at
+        batch=1 to build a single request's cache for slot splicing
+        (:meth:`repro.serving.engine.Engine.prefill_slot`).
+        """
         logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
                                         policy=policy, capacity=capacity)
         return logits, caches
 
     def decode_step(self, params, token_batch: dict, caches, pos,
                     policy: CompressionPolicy, capacity: int):
+        """One decode step.  ``pos`` is a scalar (all slots aligned) or a
+        per-slot ``[B]`` vector of absolute positions (continuous batching)."""
         return tfm.decode_tokens(self.cfg, params, token_batch, caches, pos,
                                  policy, capacity)
 

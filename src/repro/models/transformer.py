@@ -312,6 +312,9 @@ def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
                   pos, policy: CompressionPolicy, capacity: int):
     """One decode step.  token_batch: {"tokens": [B, 1(...)]}.
 
+    ``pos`` is a scalar int32 or a per-slot ``[B]`` vector (continuous
+    batching: each batch row decodes at its own absolute position and its
+    layer caches advance at their own per-slot lengths).
     Returns (logits [B, 1, ...], new caches)."""
     x = embed_tokens(cfg, params, token_batch)
     B = x.shape[0]

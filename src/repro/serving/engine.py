@@ -2,21 +2,27 @@
 
 The engine owns the jitted prefill/decode programs (cache donated across
 steps so decode is allocation-free), token sampling, and the byte-level
-cache accounting the memory benchmarks read.  Request-level batching is in
-:mod:`repro.serving.scheduler`.
+cache accounting the memory benchmarks read.  Two batching modes sit on
+top (:mod:`repro.serving.scheduler`):
+
+* wave mode — :meth:`Engine.generate` drives the whole batch in lockstep;
+* continuous mode — the scheduler drives :meth:`Engine.decode` one step at
+  a time with per-slot position vectors, and :meth:`Engine.prefill_slot`
+  splices a fresh request's batch-1 cache into a live batch slot (the cache
+  tree is donated, so the splice is an in-place batch-row write).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
 from repro.core.policy import CompressionPolicy
 from repro.dist import sharding as shd
 from repro.models.model import Model
@@ -60,6 +66,18 @@ class Engine:
             lambda p, tok, caches, pos: model.decode_step(
                 p, tok, caches, pos, ecfg.policy, cap),
             donate_argnums=(2,))
+        # Slot splice: write a batch-1 cache tree over batch row `slot` of the
+        # live (donated) cache.  Cache leaves are stacked [R, B, ...], so the
+        # batch dim is axis 1 on every leaf (incl. RWKV/SSM states); the
+        # cache pspecs keep that axis's sharding uniform across leaves, which
+        # is what keeps this DUS-at-a-traced-offset legal under SPMD.
+        splice = lambda full, one, slot: cache_lib.splice_slot(full, one, slot, axis=1)
+        if self._cache_shard is not None:
+            self._splice = jax.jit(splice, donate_argnums=(0,),
+                                   out_shardings=self._cache_shard)
+        else:
+            self._splice = jax.jit(splice, donate_argnums=(0,))
+        self._fresh1 = None  # lazily-built batch-1 empty cache (for reset_slot)
 
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
@@ -72,17 +90,43 @@ class Engine:
             caches = jax.device_put(caches, self._cache_shard)
         return logits, caches
 
-    def decode(self, token_batch: dict, caches, pos: int):
-        return self._decode(self.params, token_batch, caches, jnp.asarray(pos, jnp.int32))
+    def decode(self, token_batch: dict, caches, pos):
+        """One decode step.  ``pos``: scalar or per-slot [B] int32 vector."""
+        return self._decode(self.params, token_batch, caches,
+                            jnp.asarray(pos, jnp.int32))
 
-    def generate(self, batch: dict, max_new_tokens: int, key=None):
-        """Greedy/sampled generation.  Returns (tokens [B, T], stats)."""
+    # -- slot-level continuous batching --------------------------------
+    def prefill_slot(self, batch1: dict, caches, slot: int):
+        """Prefill ONE request (batch-1 inputs) and splice it into ``slot``.
+
+        Returns (logits [1, 1, ...] for the request's last prompt position,
+        new caches).  The batch-1 prefill is bit-identical to a solo run of
+        the same prompt, so a spliced request decodes exactly as it would
+        alone (DESIGN.md §splice isolation).  ``caches`` is donated.
+        """
+        logits, one = self._prefill(self.params, batch1)
+        return logits, self._splice(caches, one, jnp.asarray(slot, jnp.int32))
+
+    def reset_slot(self, caches, slot: int):
+        """Return ``caches`` with batch row ``slot`` cleared to empty state."""
+        if self._fresh1 is None:
+            self._fresh1 = self.model.init_caches(self.ecfg.policy, 1, self._cap())
+        return self._splice(caches, self._fresh1, jnp.asarray(slot, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: dict, max_new_tokens: int, key=None, active=None):
+        """Greedy/sampled wave generation.  Returns (tokens [B, T], stats).
+
+        ``active``: optional bool mask [B] of slots holding real requests;
+        padded copy slots are excluded from the throughput accounting.
+        """
         key = key if key is not None else jax.random.PRNGKey(0)
         cfg, ecfg = self.cfg, self.ecfg
         t0 = time.time()
         logits, caches = self.prefill(batch)
         t_prefill = time.time() - t0
         prompt_len = self._prompt_len(batch)
+        B = logits.shape[0]
 
         tok = sample(logits[:, -1], key, ecfg.temperature, ecfg.top_k)
         out = [tok]
@@ -90,7 +134,10 @@ class Engine:
         t1 = time.time()
         for t in range(max_new_tokens - 1):
             tb = {"tokens": tok[:, None] if cfg.modality != "audio" else tok[:, None, :]}
-            logits, caches = self.decode(tb, caches, prompt_len + t)
+            # per-slot position vector: the same decode program serves the
+            # continuous-batching path, where positions genuinely differ.
+            pos = jnp.full((B,), prompt_len + t, jnp.int32)
+            logits, caches = self.decode(tb, caches, pos)
             key = jax.random.fold_in(key, t)
             tok = sample(logits[:, -1], key, ecfg.temperature, ecfg.top_k)
             if ecfg.eos_id >= 0:
@@ -104,10 +151,25 @@ class Engine:
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "decode_tok_per_s": toks.shape[0] * (toks.shape[1] - 1) / max(t_decode, 1e-9),
+            "decode_tok_per_s": self._decode_tok_per_s(toks, t_decode, active),
             "cache_bytes": self.cache_nbytes(caches),
         }
         return toks, stats
+
+    def _decode_tok_per_s(self, toks, t_decode: float, active) -> float:
+        """Decode throughput over USEFUL tokens only: padded copy slots
+        (``active`` False) and post-EOS / early-exit filler are excluded, so
+        bench numbers aren't inflated by throwaway work."""
+        tnp = np.asarray(toks)
+        B, T = tnp.shape[0], tnp.shape[1]
+        act = np.ones(B, bool) if active is None else np.asarray(active, bool)
+        n_use = np.full(B, T)
+        if self.ecfg.eos_id >= 0 and self.cfg.modality != "audio":
+            hit = tnp == self.ecfg.eos_id
+            has = hit.any(axis=1)
+            n_use[has] = hit.argmax(axis=1)[has] + 1  # keep the EOS itself
+        useful_decode = int(np.maximum(n_use - 1, 0)[act].sum())  # 1st tok = prefill
+        return useful_decode / max(t_decode, 1e-9)
 
     def _prompt_len(self, batch) -> int:
         n = batch["tokens"].shape[1]

@@ -1,27 +1,37 @@
 """Request-level batching scheduler on top of the engine.
 
-Wave-based continuous batching: pending requests are padded/grouped into
-fixed-size waves (the engine's static batch), each wave generates until
-every member hits EOS or its token budget, finished slots return results
-and the next wave starts.  Straggler mitigation at this level is budget
-capping — a slot can never hold a wave longer than ``max_new_tokens``.
+Two scheduling modes over the engine's static batch of B *slots*:
 
-(True slot-level continuous batching — splicing a new request into a live
-batch — requires per-slot cache re-prefill; the cache layout supports it
-(all per-slot state is batch-dim addressable) and it is left as an
-extension point, documented in DESIGN.md.)
+* :meth:`Scheduler.run` — wave batching: pending requests are padded into
+  fixed-size waves, each wave generates until every member hits EOS or the
+  wave's max budget, then the next wave starts.  Simple, but every slot is
+  held hostage by the slowest request in its wave.
+
+* :meth:`Scheduler.run_continuous` — slot-level continuous batching: a
+  step-loop decodes all B slots each step with per-slot position/done/budget
+  vectors; the moment a slot's request hits its own EOS or budget, the next
+  queued request is spliced into that slot (batch-1 prefill →
+  :meth:`Engine.prefill_slot` batch-row write) while the other slots keep
+  decoding undisturbed.  Splice isolation — a spliced request produces
+  bit-identical greedy tokens to a solo run — is guaranteed by the per-slot
+  cache layout and batch-invariant compression (see DESIGN.md).
+
+Both modes trim each request's results at its own first EOS and report
+per-request prefill/decode latency.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
+from repro.serving.sampling import sample
 
 __all__ = ["Request", "Result", "Scheduler"]
 
@@ -36,7 +46,7 @@ class Request:
 @dataclasses.dataclass
 class Result:
     rid: int
-    tokens: np.ndarray            # generated ids
+    tokens: np.ndarray            # generated ids, truncated at first EOS
     prefill_s: float
     decode_s: float
 
@@ -46,14 +56,35 @@ class Scheduler:
         self.engine = engine
         self.prompt_pad = prompt_pad
         self.queue: deque[Request] = deque()
+        self.last_stats: dict = {}
 
     def submit(self, req: Request) -> None:
+        # A request's whole lifetime must fit the engine's cache capacity:
+        # prompt_pad tokens of prefill (+ VLM prefix) plus one appended token
+        # per decode step (the first generated token comes from prefill).
+        # Past capacity the GEAR streaming buffer would ring-wrap and corrupt
+        # the slot silently, so reject at submit time.
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+        prefix = (self.engine.cfg.num_prefix_tokens
+                  if self.engine.cfg.modality == "vlm" else 0)
+        need = self.prompt_pad + prefix + req.max_new_tokens - 1
+        cap = self.engine._cap()
+        if need > cap:
+            raise ValueError(
+                f"request {req.rid}: prompt_pad {self.prompt_pad} + budget "
+                f"{req.max_new_tokens} needs {need} cache tokens but engine "
+                f"capacity is {cap}")
         self.queue.append(req)
 
+    # ------------------------------------------------------------------
+    # Wave mode
     def run(self) -> list[Result]:
         """Drain the queue in engine-batch-sized waves."""
         results: list[Result] = []
         B = self.engine.ecfg.batch
+        eos = self.engine.ecfg.eos_id
+        t_all = time.time()
         while self.queue:
             wave = [self.queue.popleft() for _ in range(min(B, len(self.queue)))]
             while len(wave) < B:                      # pad with a copy slot
@@ -62,15 +93,129 @@ class Scheduler:
             prompts = np.stack([_pad(r.tokens, self.prompt_pad) for r in wave])
             budget = max(r.max_new_tokens for r in wave)
             toks, stats = self.engine.generate(
-                {"tokens": jnp.asarray(prompts, jnp.int32)}, budget)
+                {"tokens": jnp.asarray(prompts, jnp.int32)}, budget,
+                active=np.array([r.rid >= 0 for r in wave]))
             toks = np.asarray(toks)
             for i, r in enumerate(wave):
                 if r.rid < 0:
                     continue
-                results.append(Result(rid=r.rid, tokens=toks[i, : r.max_new_tokens],
-                                      prefill_s=stats["prefill_s"],
-                                      decode_s=stats["decode_s"]))
+                results.append(Result(
+                    rid=r.rid,
+                    tokens=_truncate_eos(toks[i, : r.max_new_tokens], eos),
+                    prefill_s=stats["prefill_s"],
+                    decode_s=stats["decode_s"]))
+        self.last_stats = {"wall_s": time.time() - t_all,
+                           "tokens": int(sum(len(r.tokens) for r in results))}
         return results
+
+    # ------------------------------------------------------------------
+    # Continuous mode
+    def run_continuous(self) -> list[Result]:
+        """Drain the queue with slot-level continuous batching.
+
+        Greedy-deterministic at ``temperature == 0``: each request's tokens
+        are bit-identical to a solo run regardless of what shares the batch.
+        """
+        eng = self.engine
+        if eng.cfg.modality == "audio":
+            raise NotImplementedError("continuous batching drives text tokens")
+        B = eng.ecfg.batch
+        eos = eng.ecfg.eos_id
+        key = jax.random.PRNGKey(0)
+
+        results: list[Result] = []
+        caches = eng.init_caches()
+        pos = np.zeros(B, np.int32)        # per-slot absolute decode position
+        budget = np.zeros(B, np.int32)     # per-slot remaining-token budget
+        done = np.ones(B, bool)            # per-slot idle flag
+        fresh = np.ones(B, bool)           # per-slot cache row is empty-state
+        reqs: list[Request | None] = [None] * B
+        toks_buf: list[list[int]] = [[] for _ in range(B)]
+        cur = np.zeros(B, np.int32)        # last sampled token per slot
+        prefill_s = np.zeros(B)
+        decode_s = np.zeros(B)
+        steps = 0
+        t_decode_total = 0.0
+        t_all = time.time()
+
+        def finish(s: int) -> None:
+            r = reqs[s]
+            results.append(Result(
+                rid=r.rid,
+                tokens=_truncate_eos(np.asarray(toks_buf[s], np.int32), eos),
+                prefill_s=float(prefill_s[s]),
+                decode_s=float(decode_s[s])))
+            reqs[s] = None
+            done[s] = True
+            cur[s] = 0
+
+        def splice(s: int, caches):
+            r = self.queue.popleft()
+            prompt = _pad(r.tokens, self.prompt_pad)[None]
+            t0 = time.time()
+            logits, caches = eng.prefill_slot(
+                {"tokens": jnp.asarray(prompt, jnp.int32)}, caches, s)
+            first = int(np.asarray(
+                sample(logits[:, -1], key, eng.ecfg.temperature, eng.ecfg.top_k))[0])
+            prefill_s[s] = time.time() - t0
+            fresh[s] = False
+            reqs[s] = r
+            toks_buf[s] = [first]
+            cur[s] = first
+            pos[s] = eng._prompt_len({"tokens": prompt})
+            budget[s] = r.max_new_tokens
+            decode_s[s] = 0.0
+            done[s] = False
+            if r.max_new_tokens <= 1 or (eos >= 0 and first == eos):
+                finish(s)
+            return caches
+
+        while self.queue or not bool(done.all()):
+            for s in range(B):
+                while done[s] and self.queue:
+                    caches = splice(s, caches)
+                if done[s] and not fresh[s]:
+                    # queue drained: clear the slot so it idles on an empty
+                    # cache row instead of decoding stale request state
+                    caches = eng.reset_slot(caches, s)
+                    fresh[s] = True
+                    pos[s] = 0
+                    cur[s] = 0
+            if bool(done.all()):
+                break
+            t0 = time.time()
+            tb = {"tokens": jnp.asarray(cur[:, None])}
+            logits, caches = eng.decode(tb, caches, jnp.asarray(pos))
+            key = jax.random.fold_in(key, steps)
+            nxt = np.asarray(sample(logits[:, -1], key,
+                                    eng.ecfg.temperature, eng.ecfg.top_k))
+            step_t = time.time() - t0
+            t_decode_total += step_t
+            steps += 1
+            pos += 1  # idle slots advance harmlessly; a splice rewrites pos[s]
+            for s in np.nonzero(~done)[0]:
+                decode_s[s] += step_t
+                tok = int(nxt[s])
+                toks_buf[s].append(tok)
+                cur[s] = tok
+                if (eos >= 0 and tok == eos) or len(toks_buf[s]) >= budget[s]:
+                    finish(s)
+
+        self.last_stats = {
+            "wall_s": time.time() - t_all,
+            "decode_s": t_decode_total,
+            "decode_steps": steps,
+            "tokens": int(sum(len(r.tokens) for r in results)),
+        }
+        return results
+
+
+def _truncate_eos(tokens: np.ndarray, eos_id: int) -> np.ndarray:
+    """Trim generated ids at the request's own first EOS (kept inclusive)."""
+    if eos_id < 0:
+        return tokens
+    hits = np.nonzero(tokens == eos_id)[0]
+    return tokens[: hits[0] + 1] if hits.size else tokens
 
 
 def _pad(tokens: np.ndarray, length: int) -> np.ndarray:

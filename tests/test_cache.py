@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (CacheConfig, named_policy, init_layer_cache,
-                        prefill_layer_cache, append_token, attend, dense_kv)
+                        prefill_layer_cache, append_token, attend, dense_kv,
+                        reset_slot, prefill_into_slot)
 from repro.kernels.ops import gear_attend
 
 B, H, DH = 2, 2, 64
@@ -45,13 +46,13 @@ def test_buffer_tokens_exact():
 def test_append_compresses_every_nb_steps():
     cfg, cache, *_ = build(small_policy("gear_kivi2"), n=32)
     nb = cfg.chunk
-    assert int(cache.length) == 32
+    assert int(cache.length[0]) == 32  # per-slot lengths
     before = cache.k_packed.copy()
     for t in range(nb):
         kt = jax.random.normal(jax.random.PRNGKey(100 + t), (B, H, DH))
         cache = append_token(cfg, cache, kt, kt)
     # chunk 2 (tokens 32..47) must now be compressed into packed storage
-    assert int(cache.length) == 32 + nb
+    assert (cache.length == 32 + nb).all()
     assert not (cache.k_packed[:, :, 32:48] == before[:, :, 32:48]).all()
 
 
@@ -81,7 +82,7 @@ def test_append_jit_cond_static():
     ap = jax.jit(lambda c, kt, vt: append_token(cfg, c, kt, vt))
     kt = jnp.ones((B, H, DH))
     c = ap(cache, kt, kt)
-    assert int(c.length) == 33
+    assert (c.length == 33).all()
 
 
 def test_fp16_and_window_caches():
@@ -97,6 +98,33 @@ def test_fp16_and_window_caches():
                        policy=pol, kind="window", window=8)
     cw = prefill_layer_cache(cfgw, init_layer_cache(cfgw),
                              jnp.ones((B, H, 20, DH)), jnp.ones((B, H, 20, DH)))
-    assert int(cw.length) == 20
-    # ring buffer holds only the last 8 positions
-    assert int((cw.pos >= 12).sum()) == 8
+    assert (cw.length == 20).all()
+    # ring buffer holds only the last 8 positions (per slot)
+    assert int((cw.pos >= 12).sum()) == 8 * B
+
+
+def test_reset_and_prefill_into_slot_match_solo_prefill():
+    """The cache-level half of the slot-splice protocol: a slot prefilled
+    in place reconstructs bit-identically to a solo batch-1 prefill, and the
+    neighbouring slot is untouched."""
+    cfg, cache, k, v = build(small_policy("gear_kcvt4"), n=40)
+
+    c2 = reset_slot(cfg, cache, 1)
+    assert int(c2.length[1]) == 0 and int(c2.length[0]) == 40
+    kh2, _ = dense_kv(cfg, c2)
+    assert (kh2[1] == 0).all()          # reset slot masks as empty
+
+    key = jax.random.PRNGKey(7)
+    k1 = jax.random.normal(key, (1, H, 24, DH))
+    v1 = jax.random.normal(jax.random.fold_in(key, 1), (1, H, 24, DH))
+    c3 = prefill_into_slot(cfg, c2, k1, v1, 1)
+    assert int(c3.length[1]) == 24 and int(c3.length[0]) == 40
+
+    cfg1 = dataclasses.replace(cfg, batch=1)
+    solo = prefill_layer_cache(cfg1, init_layer_cache(cfg1), k1, v1)
+    kh_b, vh_b = dense_kv(cfg, c3)
+    kh_s, vh_s = dense_kv(cfg1, solo)
+    assert (kh_b[1:2] == kh_s).all() and (vh_b[1:2] == vh_s).all()
+    # slot 0 reconstructs exactly as before the splice
+    kh0, _ = dense_kv(cfg, cache)
+    assert (kh_b[0] == kh0[0]).all()

@@ -61,7 +61,7 @@ def _cache_arrays(polname, B=2, H=2, Dh=128, S=128, n=100, nb=None):
     cache = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
     BH = B * H
     flat = lambda x: None if x is None else x.reshape((BH,) + x.shape[2:])
-    n_comp = (cache.length // cfg.chunk) * cfg.chunk
+    n_comp = (cache.length[0] // cfg.chunk) * cfg.chunk  # uniform slots
     common = (flat(cache.k_packed), flat(cache.k_scale), flat(cache.k_zero),
               flat(cache.v_packed), flat(cache.v_scale), flat(cache.v_zero), n_comp)
     extras = dict(

@@ -104,6 +104,50 @@ def test_chunked_scan_equals_sequential(seed, chunk, mode):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3)
 
 
+_SCHED_ENGINE = []
+
+
+def _sched_engine():
+    """Tiny continuous-batching engine, built once for the property below."""
+    if not _SCHED_ENGINE:
+        from repro.configs.base import ModelConfig
+        from repro.models.model import build_model
+        from repro.serving.engine import Engine, EngineConfig
+        cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                          num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                          vocab_size=64)
+        pol = dataclasses.replace(named_policy("gear_kcvt4"),
+                                  buffer_size=8, rank=2, rank_decode=2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _SCHED_ENGINE.append(Engine(model, params, EngineConfig(
+            batch=2, capacity=32, policy=pol, eos_id=-1)))
+    return _SCHED_ENGINE[0]
+
+
+@given(seed=st.integers(0, 2**16), n_reqs=st.integers(1, 6),
+       data=st.data())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_continuous_batching_serves_every_request_once(seed, n_reqs, data):
+    """Any submit order and any budget mix: ``run_continuous`` returns every
+    rid exactly once, with exactly its own budget of tokens (eos disabled)."""
+    from repro.serving.scheduler import Request, Scheduler
+    rng = np.random.RandomState(seed)
+    budgets = [data.draw(st.integers(1, 8), label=f"budget{i}")
+               for i in range(n_reqs)]
+    order = data.draw(st.permutations(range(n_reqs)), label="submit_order")
+    sched = Scheduler(_sched_engine(), prompt_pad=6)
+    for i in order:
+        sched.submit(Request(rid=i, tokens=rng.randint(1, 64, size=rng.randint(1, 7)),
+                             max_new_tokens=budgets[i]))
+    results = sched.run_continuous()
+    assert sorted(r.rid for r in results) == list(range(n_reqs))
+    for r in results:
+        assert len(r.tokens) == budgets[r.rid], (r.rid, budgets[r.rid])
+        assert r.tokens.dtype == np.int32
+
+
 @given(n_prefill=st.integers(5, 40), n_decode=st.integers(0, 12),
        seed=st.integers(0, 2**10))
 @settings(max_examples=8, deadline=None)
@@ -127,7 +171,7 @@ def test_cache_roundtrip_any_phase(n_prefill, n_decode, seed):
         cache = append_token(cfg, cache, kt, vt)
         ks.append(kt[:, :, None]); vs.append(vt[:, :, None])
     total = n_prefill + n_decode
-    assert int(cache.length) == total
+    assert (cache.length == total).all()
     k_all = jnp.concatenate(ks, axis=2)
     kh, _ = dense_kv(cfg, cache)
     rel = float(jnp.linalg.norm(kh[:, :, :total] - k_all) / jnp.linalg.norm(k_all))

@@ -1,0 +1,255 @@
+"""Slot-level continuous batching: splice isolation, EOS truncation,
+throughput accounting, cache byte accounting, and pspec legality.
+
+The archetype test is splice isolation: a request spliced into a live batch
+mid-decode must produce bit-identical greedy tokens to running it alone —
+for every cache kind (gear / fp16 / window).  This pins the per-slot cache
+layout, per-slot RoPE, and batch-invariant compression all at once.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import CacheConfig
+from repro.core.outlier import outlier_count
+from repro.core.policy import FP16, named_policy
+from repro.models.model import build_model
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Request, Scheduler, _pad, _truncate_eos
+
+EOS = 3
+PROMPT_PAD = 8
+GEAR_POL = dataclasses.replace(named_policy("gear_kcvt4"),
+                               buffer_size=8, rank=2, rank_decode=2)
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                   vocab_size=64)
+# local+global pattern -> one sliding-window (ring) cache and one full cache
+TINY_WIN = dataclasses.replace(TINY, attn_pattern="local_global",
+                               pattern_locals=1, local_window=8)
+
+KINDS = {
+    "gear": (TINY, GEAR_POL),
+    "fp16": (TINY, FP16),
+    "window": (TINY_WIN, FP16),
+}
+
+_ENGINES: dict = {}
+
+
+def _engines(kind):
+    """(batched engine, solo engine) pair per cache kind, built once."""
+    if kind not in _ENGINES:
+        cfg, pol = KINDS[kind]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ecfg = EngineConfig(batch=3, capacity=48, policy=pol, eos_id=EOS)
+        _ENGINES[kind] = (Engine(model, params, ecfg),
+                         Engine(model, params, dataclasses.replace(ecfg, batch=1)))
+    return _ENGINES[kind]
+
+
+def _requests(n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    budgets = [6, 3, 9, 1, 5, 7, 2, 8][:n]
+    return [Request(rid=i,
+                    tokens=rng.randint(4, 64, size=rng.randint(2, PROMPT_PAD + 1)),
+                    max_new_tokens=b)
+            for i, b in enumerate(budgets)]
+
+
+def _solo_reference(solo: Engine, req: Request) -> np.ndarray:
+    prompt = _pad(req.tokens, PROMPT_PAD)[None]
+    toks, _ = solo.generate({"tokens": jnp.asarray(prompt, jnp.int32)},
+                            req.max_new_tokens)
+    return _truncate_eos(np.asarray(toks)[0, : req.max_new_tokens], EOS)
+
+
+# ---------------------------------------------------------------------------
+# Splice isolation (the archetype)
+
+
+@pytest.mark.parametrize("kind", ["gear", "fp16", "window"])
+def test_splice_isolation_bit_identical(kind):
+    """Continuous-batched greedy output == solo output, token for token."""
+    eng, solo = _engines(kind)
+    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    reqs = _requests()
+    for r in reqs:
+        sched.submit(r)
+    out = {r.rid: r.tokens for r in sched.run_continuous()}
+    assert sorted(out) == [r.rid for r in reqs]
+    for r in reqs:
+        ref = _solo_reference(solo, r)
+        np.testing.assert_array_equal(
+            out[r.rid], ref,
+            err_msg=f"{kind}: rid {r.rid} diverged from its solo run")
+
+
+@pytest.mark.parametrize("kind", ["gear", "fp16", "window"])
+def test_wave_and_continuous_agree(kind):
+    """Both scheduling modes return the same per-request greedy tokens."""
+    eng, _ = _engines(kind)
+    reqs = _requests()
+    outs = []
+    for mode in ("run", "run_continuous"):
+        sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+        for r in reqs:
+            sched.submit(r)
+        outs.append({r.rid: r.tokens for r in getattr(sched, mode)()})
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[0][rid], outs[1][rid])
+
+
+def test_continuous_per_request_latency_and_budgets():
+    eng, _ = _engines("gear")
+    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    reqs = _requests()
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run_continuous()
+    budgets = {r.rid: r.max_new_tokens for r in reqs}
+    for res in results:
+        assert 1 <= len(res.tokens) <= budgets[res.rid]
+        assert res.prefill_s >= 0 and res.decode_s >= 0
+        if len(res.tokens) < budgets[res.rid]:       # ended early => own EOS
+            assert res.tokens[-1] == EOS
+        assert EOS not in res.tokens[:-1]            # nothing past first EOS
+    assert sched.last_stats["decode_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Wave-mode satellite fixes
+
+
+def test_wave_results_truncated_at_own_eos():
+    eng, _ = _engines("gear")
+    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    for r in _requests():
+        sched.submit(r)
+    for res in sched.run():
+        assert EOS not in res.tokens[:-1], (
+            f"rid {res.rid} kept tokens after its own EOS")
+
+
+def test_decode_tok_per_s_excludes_copy_slots_and_post_eos():
+    eng, _ = _engines("gear")
+    prompt = np.tile(_pad(_requests()[0].tokens, PROMPT_PAD), (3, 1))
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+    budget = 6
+    toks, stats_all = eng.generate(batch, budget)
+    active = np.array([True, False, False])          # 2 padded copy slots
+    _, stats_one = eng.generate(batch, budget, active=active)
+    # identical prompts => identical decode work, but only 1/3 of it useful
+    assert stats_one["decode_tok_per_s"] < stats_all["decode_tok_per_s"]
+    tnp = np.asarray(toks)
+    hits = np.nonzero(tnp[0] == EOS)[0]
+    n_use = (hits[0] + 1 if hits.size else tnp.shape[1]) - 1
+    assert stats_one["decode_tok_per_s"] == pytest.approx(
+        n_use / stats_one["decode_s"], rel=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Cache byte accounting (pins the compression-ratio claim)
+
+
+def _expected_gear_layer_bytes(ccfg: CacheConfig) -> int:
+    """Closed-form byte count of one GEAR (kcvt) layer cache."""
+    B, H, Dh, S = ccfg.batch, ccfg.kv_heads, ccfg.head_dim, ccfg.capacity
+    pol = ccfg.policy
+    per = 32 // pol.bits
+    C, nb, r = ccfg.n_chunks, ccfg.chunk, pol.rank
+    total = 2 * B * H * S * (Dh // per) * 4              # packed K+V codes
+    total += 2 * B * H * C * Dh * 2                      # K scale+zero (per-channel)
+    total += 2 * B * H * S * 1 * 2                       # V scale+zero (per-token)
+    total += 2 * (B * H * S * r + B * H * C * Dh * r) * 2  # low-rank A + B, K+V
+    ks = outlier_count(nb, pol.sparsity)                 # K outliers per chunk col
+    kv = outlier_count(Dh, pol.sparsity)                 # V outliers per token row
+    total += (B * H * C * Dh * 2 * ks + B * H * S * 2 * kv) * (2 + 4)  # val+idx
+    total += 2 * B * H * nb * Dh * 2                     # fp16 streaming buffer
+    total += B * 4                                       # per-slot lengths
+    return total
+
+
+def test_engine_cache_nbytes_matches_closed_form():
+    eng, _ = _engines("gear")
+    R = TINY.pattern_repeats
+    ccfg = CacheConfig(batch=3, kv_heads=TINY.num_kv_heads, head_dim=TINY.head_dim,
+                       capacity=48, policy=GEAR_POL)
+    expected = R * _expected_gear_layer_bytes(ccfg)
+    got = Engine.cache_nbytes(eng.init_caches())
+    assert got == expected, (got, expected)
+
+    fp16_eng, _ = _engines("fp16")
+    fp16_cap = fp16_eng._cap()        # engine rounds 48 up to FP16's 64-buffer
+    fp16_expected = R * (2 * 3 * TINY.num_kv_heads * fp16_cap * TINY.head_dim * 2
+                         + 3 * 4)
+    fp16_got = Engine.cache_nbytes(fp16_eng.init_caches())
+    assert fp16_got == fp16_expected, (fp16_got, fp16_expected)
+
+
+def test_gear_cache_strictly_below_fp16_at_paper_geometry():
+    """The compression-ratio claim, pinned on real allocations: at the
+    paper's serving geometry a GEAR layer cache is strictly smaller than the
+    FP16 cache of the same capacity (the toy test geometry above is too
+    small for chunk overheads to amortize — that regime is fp16's)."""
+    from repro.core.cache import init_layer_cache
+
+    pol = named_policy("gear_kcvt4")
+    gear_cfg = CacheConfig(batch=2, kv_heads=8, head_dim=128, capacity=1024,
+                           policy=pol)
+    fp16_cfg = dataclasses.replace(gear_cfg, policy=FP16, kind="fp16")
+    gear_bytes = Engine.cache_nbytes(init_layer_cache(gear_cfg))
+    fp16_bytes = Engine.cache_nbytes(init_layer_cache(fp16_cfg))
+    assert gear_bytes == _expected_gear_layer_bytes(gear_cfg)
+    assert gear_bytes < fp16_bytes
+    # 4-bit backbone + factors should land well under half of fp16
+    assert gear_bytes / fp16_bytes < 0.55, gear_bytes / fp16_bytes
+
+
+# ---------------------------------------------------------------------------
+# Sharding: the slot-splice donation path keeps legal cache pspecs
+
+
+def test_cache_pspecs_legal_and_splice_runs_under_mesh():
+    from repro.dist import sharding as shd
+    from repro.launch.mesh import make_test_mesh
+
+    # Use a real data-parallel axis when the topology allows (CI's full lane
+    # fakes 8 host devices), so the traced-offset batch-row splice actually
+    # crosses shard boundaries; single-device runs still smoke the specs.
+    nd = jax.device_count()
+    if nd >= 4:
+        mesh = make_test_mesh(data=2, model=2)
+    elif nd >= 2:
+        mesh = make_test_mesh(data=2, model=1)
+    else:
+        mesh = make_test_mesh(data=1, model=1)
+    cfg, pol = KINDS["gear"]
+    model = build_model(cfg)
+    cache_abs = jax.eval_shape(lambda: model.init_caches(pol, 2, 48))
+    specs = shd.cache_pspecs(cfg, cache_abs, mesh, batch=2)
+    # every spec must be realizable on the mesh (fit_spec already legalized)
+    shd.shardings_for(mesh, specs)
+    # per-slot scalars (length [R, B], window pos [R, B, W]) flow through too
+    for leaf, spec in zip(jax.tree.leaves(cache_abs), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))):
+        assert len(spec) <= len(leaf.shape)
+
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(batch=2, capacity=48, policy=pol, eos_id=EOS),
+                 mesh=mesh)
+    caches = eng.init_caches()
+    prompt = _pad(_requests()[0].tokens, PROMPT_PAD)[None]
+    _, caches = eng.prefill_slot({"tokens": jnp.asarray(prompt, jnp.int32)},
+                                 caches, 1)
+    tb = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    logits, _ = eng.decode(tb, caches, jnp.asarray([0, PROMPT_PAD], jnp.int32))
+    assert logits.shape[0] == 2
