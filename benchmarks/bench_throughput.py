@@ -12,7 +12,16 @@ BOTH:
       relative tokens/s of the two scheduler modes (CPU-relative but the
       ratio is scheduling-structural: waves decode every slot to the wave's
       max budget, continuous splices the next request the moment a slot
-      frees).  ``--smoke --json`` runs only (3) for the CI artifact.
+      frees).  ``--smoke --json`` runs (3) + (4) for the CI artifact;
+  (4) fused vs XLA decode-attend on the same mixed-budget continuous
+      workload (``--fused`` runs only this) — the ragged fused ``gear_attend``
+      path against the portable jnp ``cache.attend`` path.  On CPU the fused
+      path runs the jnp oracle, so the number is layout-relative only; on
+      TPU it is the Pallas kernel and the gap is the paper's fused-dequant
+      decode win.
+
+Rows that the CI regression gate (benchmarks/check_regression.py) diffs
+against benchmarks/baseline.json carry a machine-readable ``value``.
 """
 
 from __future__ import annotations
@@ -138,17 +147,65 @@ def wave_vs_continuous(key, n_reqs: int = 12, batch: int = 4):
     for mode, tag in (("run", "wave"), ("run_continuous", "continuous")):
         drive(mode, warm=True)  # compile warmup so tokens/s is steady-state
         out[tag] = drive(mode, warm=False)
-        emit(f"throughput_sched/{tag}", 0.0, f"tok_per_s={out[tag]:.1f}")
+        emit(f"throughput_sched/{tag}", 0.0, f"tok_per_s={out[tag]:.1f}",
+             value=out[tag])
     ratio = out["continuous"] / out["wave"]
     emit("throughput_sched/continuous_over_wave", 0.0,
-         f"{ratio:.2f}x (mixed budgets 8-64, batch={batch}, n={n_reqs})")
+         f"{ratio:.2f}x (mixed budgets 8-64, batch={batch}, n={n_reqs})",
+         value=ratio)
+    nbytes = Engine.cache_nbytes(eng.init_caches())
+    emit("cache_nbytes/bench_engine_gear", 0.0,
+         f"{nbytes} bytes (batch={batch}, cap={eng._cap()})", value=nbytes)
     assert ratio >= 1.0, f"continuous batching slower than waves: {ratio:.2f}x"
     return ratio
 
 
-def run(key=None, smoke: bool = False):
+def fused_vs_xla(key, n_reqs: int = 8, batch: int = 4):
+    """Continuous-mode decode throughput: fused gear_attend vs jnp attend.
+
+    Identical mixed-budget workload and scheduler either way; only the
+    decode-attend path differs (``EngineConfig.fused``).  The ragged per-slot
+    masking inside the kernel is what lets the continuous batches take the
+    fused path at all — before it they silently fell back to XLA attend.
+    """
+    from repro.serving.scheduler import Scheduler
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"),
+                              buffer_size=16, rank=2, rank_decode=2)
+    prompt_pad = 16
+    out = {}
+    for tag, fused in (("xla", "off"), ("fused", "auto")):
+        eng = Engine(m, params, EngineConfig(batch=batch, capacity=96, policy=pol,
+                                             eos_id=-1, fused=fused))
+
+        def drive(n: int):
+            sched = Scheduler(eng, prompt_pad=prompt_pad)
+            for r in _mixed_requests(n, prompt_pad, cfg.vocab_size):
+                sched.submit(r)
+            sched.run_continuous()
+            st = sched.last_stats
+            return st["tokens"] / max(st["decode_s"], 1e-9), st["attend_path"]
+
+        drive(2 * batch)                     # compile warmup
+        tok_s, path = drive(n_reqs)
+        out[tag] = tok_s
+        emit(f"throughput_fused/decode_tok_per_s_{tag}", 0.0,
+             f"{tok_s:.1f} tok/s attend_path={path}", value=tok_s)
+    ratio = out["fused"] / out["xla"]
+    emit("throughput_fused/fused_over_xla", 0.0,
+         f"{ratio:.2f}x (CPU oracle vs XLA attend; on TPU = Pallas kernel)",
+         value=ratio)
+    return ratio
+
+
+def run(key=None, smoke: bool = False, fused_only: bool = False):
     key = key if key is not None else jax.random.PRNGKey(0)
+    if fused_only:
+        return fused_vs_xla(key)
     sched_ratio = wave_vs_continuous(key)
+    fused_vs_xla(key)
     if smoke:
         return sched_ratio
     cfg = get_config("llama2-7b")
@@ -164,11 +221,13 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="only the wave-vs-continuous scheduler comparison")
+                    help="scheduler + fused-attend comparisons only")
+    ap.add_argument("--fused", action="store_true",
+                    help="only the fused-vs-XLA decode-attend comparison")
     ap.add_argument("--json", default=None,
                     help="also write the emitted rows to this JSON file")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, fused_only=args.fused)
     if args.json:
         from benchmarks.common import write_json
         write_json(args.json)

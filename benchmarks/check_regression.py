@@ -1,0 +1,121 @@
+"""CI bench regression gate: diff bench-out/*.json against baseline.json.
+
+Benches emit rows whose ``value`` field is a machine-readable metric
+(:func:`benchmarks.common.emit`).  This script compares every metric named
+in the committed baseline against the freshly-measured rows and fails on:
+
+* ``*tok_per_s*``  — throughput more than ``--tol`` (default 15%) BELOW the
+  baseline (timing metrics; slack absorbs runner jitter, a real fused-path
+  or scheduler regression is far larger);
+* ``*_over_*``     — relative ratios (e.g. fused-vs-XLA attend), same
+  ``--tol`` floor; both sides are measured in the same run, so these are
+  machine-independent and catch a path regression even when absolute tok/s
+  baselines were recorded on different hardware;
+* ``*nbytes*``     — ANY growth (byte accounting is deterministic: cache
+  growth means the compressed layout regressed, so zero tolerance);
+* metrics missing from the bench output (a silently-dropped bench row must
+  fail loudly, not skip the gate).
+
+Refresh the baseline after an intentional change with::
+
+    python -m benchmarks.bench_throughput --smoke --json bench-out/throughput.json
+    python -m benchmarks.check_regression bench-out --write-baseline --derate 0.6
+
+``--derate`` scales the recorded *absolute* tok/s floors (ratios and byte
+counts stay exact) so a baseline measured on a fast dev machine does not
+false-fail on slower CI runners.  The committed baseline keeps the absolute
+floors aggressively derated (~0.4) as a catastrophic-collapse backstop; the
+``*_over_*`` ratio rows are the sensitive, machine-independent guard, and
+the smoke-bench CI job installs the ``jax04`` pin so runs compare like with
+like.
+
+Exit status: 0 clean, 1 on any regression (CI fails the step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_rows(bench_dir: str) -> dict[str, float]:
+    """name -> value for every row (in any bench-out JSON) carrying a value."""
+    rows: dict[str, float] = {}
+    paths = sorted(glob.glob(os.path.join(bench_dir, "*.json")))
+    if not paths:
+        sys.exit(f"check_regression: no *.json under {bench_dir!r}")
+    for path in paths:
+        with open(path) as f:
+            for row in json.load(f):
+                if row.get("value") is not None:
+                    rows[row["name"]] = float(row["value"])
+    return rows
+
+
+def governed(name: str) -> bool:
+    return "tok_per_s" in name or "nbytes" in name or "_over_" in name
+
+
+def check(baseline: dict[str, float], rows: dict[str, float],
+          tol: float) -> list[str]:
+    failures = []
+    for name, ref in sorted(baseline.items()):
+        new = rows.get(name)
+        if new is None:
+            failures.append(f"{name}: missing from bench output (baseline {ref:g})")
+        elif "nbytes" in name and new > ref:
+            failures.append(f"{name}: {new:g} bytes > baseline {ref:g} (any growth fails)")
+        elif "nbytes" not in name and new < ref * (1.0 - tol):
+            failures.append(
+                f"{name}: {new:g} < {ref * (1.0 - tol):g} "
+                f"(baseline {ref:g} - {tol:.0%} tolerance)")
+        else:
+            print(f"ok   {name}: {new:g} (baseline {ref:g})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench_dir", help="directory of bench *.json row dumps")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="allowed fractional tok_per_s drop (default 0.15)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the governed metrics of this run as the new baseline")
+    ap.add_argument("--derate", type=float, default=1.0,
+                    help="scale recorded absolute tok_per_s floors at "
+                         "--write-baseline time (cross-machine headroom)")
+    args = ap.parse_args(argv)
+
+    rows = load_rows(args.bench_dir)
+    if args.write_baseline:
+        base = {n: v * (args.derate if "tok_per_s" in n else 1.0)
+                for n, v in sorted(rows.items()) if governed(n)}
+        if not base:
+            sys.exit("check_regression: no governed (*tok_per_s*/*nbytes*) rows to baseline")
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(base)} baseline metrics to {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(baseline, rows, args.tol)
+    for msg in failures:
+        print(f"FAIL {msg}", file=sys.stderr)
+    if failures:
+        print(f"check_regression: {len(failures)} regression(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"check_regression: {len(baseline)} metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

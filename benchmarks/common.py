@@ -12,8 +12,12 @@ import jax.numpy as jnp
 ROWS: list[tuple] = []
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str, value: float | None = None) -> None:
+    """Record one bench row.  ``value`` is an optional machine-readable
+    metric (tok/s, bytes, ratio) the CI regression gate
+    (benchmarks/check_regression.py) can diff against baseline.json —
+    ``derived`` stays the human-readable summary string."""
+    ROWS.append((name, us_per_call, derived, value))
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
@@ -22,7 +26,9 @@ def write_json(path: str) -> None:
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
-    rows = [{"name": n, "us_per_call": t, "derived": der} for n, t, der in ROWS]
+    rows = [{"name": n, "us_per_call": t, "derived": der,
+             **({"value": val} if val is not None else {})}
+            for n, t, der, val in ROWS]
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
 

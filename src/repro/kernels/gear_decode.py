@@ -21,6 +21,17 @@ produces the paper's throughput gain on memory-bound decode.
 
 Grid: (BH, C).  Block shapes are MXU/VPU aligned: Dh ∈ {64, 128, 256} maps
 to lane-dim 128 tiles; the chunk dim (n_b = 64/128) is the sublane dim.
+
+**Ragged batches.**  ``n_comp`` may be a scalar (all slots at one extent) or
+a per-row ``[BH]`` vector: each (bh, c) grid program reads its own row's
+compressed extent and masks chunk scores past it, so mixed-length continuous
+batches run the fused path directly.  A row at extent 0 accumulates an
+all-masked (uniform) softmax over its own cache rows: when the row's buffer
+holds tokens, the caller's ``exp(m - m_tot)`` correction zeroes that weight;
+when the row is fully empty (length 0), the correction is exp(0) = 1 and the
+output is the mean of the slot's cache rows — zeros because ``reset_slot``
+zeroes the slot's bytes, exactly matching the oracle.  Either way the math is
+per-row only (no cross-slot leakage, no NaN).
 """
 
 from __future__ import annotations
@@ -129,7 +140,10 @@ def gear_decode(
     k_sp_val=None, k_sp_idx=None, v_sp_val=None, v_sp_idx=None,
     *, bits: int, chunk: int, scale_factor: float, interpret: bool = False,
 ):
-    """See ref.gear_decode_ref for the contract.  Returns (acc, m, l)."""
+    """See ref.gear_decode_ref for the contract.  Returns (acc, m, l).
+
+    ``n_comp``: scalar or per-row [BH] int32 compressed extents (ragged).
+    """
     BH, G, Dh = q.shape
     S = k_packed.shape[1]
     C = S // chunk
@@ -152,7 +166,8 @@ def gear_decode(
         v_sp_val = jnp.zeros((BH, S, 1), f32)
         v_sp_idx = jnp.full((BH, S, 1), -1, jnp.int32)
 
-    n_comp_arr = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (1,))
+    # scalar extents broadcast to one row per (batch, head) grid program
+    n_comp_arr = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (BH,))
 
     grid = (BH, C)
     kernel = functools.partial(
@@ -168,7 +183,7 @@ def gear_decode(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda x, c: (0,)),                       # n_comp
+            pl.BlockSpec((1,), lambda x, c: (x,)),                       # n_comp[bh]
             pl.BlockSpec((1, G, Dh), bh),                                # q
             pl.BlockSpec((1, chunk, Lp), lambda x, c: (x, c, 0)),        # k_packed
             pl.BlockSpec((1, 1, Dh), lambda x, c: (x, c, 0)),            # k_scale

@@ -20,7 +20,8 @@ from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.gear_decode import gear_decode
 from repro.kernels.quant_pack import quant_pack
 
-__all__ = ["on_tpu", "gear_attend", "flash_attention", "quantize_chunk"]
+__all__ = ["on_tpu", "fused_supported", "gear_attend", "flash_attention",
+           "quantize_chunk"]
 
 NEG_INF = -1e30
 
@@ -33,18 +34,35 @@ def _flat(x, bh):
     return None if x is None else x.reshape((bh,) + x.shape[2:])
 
 
+def fused_supported(cfg: CacheConfig) -> bool:
+    """True when this layer cache has the fused-kernel layout.
+
+    The kernel streams one K-stat row per chunk, so it needs a GEAR cache
+    with per-channel K quantization at chunk granularity (group == chunk);
+    both recommended policies (GEAR-KCVT-4bit, GEAR-KIVI-2bit) qualify, the
+    FlexGen-style per-token-group backbone (K in the V layout) does not.
+    The check is static — safe to branch on at trace time.
+    """
+    if cfg.kind != "gear" or cfg.policy.is_fp16:
+        return False
+    scheme, group = cfg.k_scheme()
+    if scheme != "per_channel":
+        return False
+    return (cfg.chunk if group is None else group) == cfg.chunk
+
+
 def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
                 force_kernel: bool = False, interpret: bool = False) -> jnp.ndarray:
     """Decode attention over a GEAR layer cache via the fused kernel path.
 
     q: [B, Hq, Dh] -> [B, Hq, Dh].  Requires the engine layout
-    (group == chunk for K; see DESIGN.md) which both recommended policies
-    (GEAR-KCVT-4bit, GEAR-KIVI-2bit) satisfy.
+    (group == chunk for K — :func:`fused_supported`; see DESIGN.md) which
+    both recommended policies (GEAR-KCVT-4bit, GEAR-KIVI-2bit) satisfy.
 
-    The fused kernel takes ONE shared compressed extent, so this path
-    requires all slots at the same length (wave mode).  Mixed-length
-    continuous batches must use :func:`repro.core.cache.attend`, whose masks
-    are per-slot; per-slot masking inside the kernel is tracked in DESIGN.md.
+    Ragged-aware: ``cache.length`` is the per-slot ``[B]`` length vector and
+    every slot attends over exactly its own compressed extent and buffer
+    fill, inside the kernel — mixed-length continuous batches take this
+    path directly (DESIGN.md §ragged fused decode).
     """
     pol = cfg.policy
     B, Hq, Dh = q.shape
@@ -53,21 +71,11 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     BH = B * H
     qf = q.astype(jnp.float32).reshape(BH, G, Dh)
     nb = cfg.chunk
-    length = cache.length  # [B] per-slot lengths; must be uniform here
-    if not isinstance(length, jax.core.Tracer):
-        lens = jax.device_get(length)
-        if lens.min() != lens.max():
-            raise ValueError(
-                "gear_attend requires uniform slot lengths (wave mode); "
-                "mixed-length continuous batches must use "
-                "repro.core.cache.attend")
-    # Under jit the check above cannot raise, so poison the output with NaN
-    # instead of silently attending past shorter slots' valid extent.
-    uniform = jnp.min(length) == jnp.max(length)
-    poison = jnp.where(uniform, 0.0, jnp.nan).astype(jnp.float32)
-    length = jnp.max(length)
-    n_comp = (length // nb) * nb
-    n_buf = length - n_comp
+    # per-slot extents, repeated per head to match the [B*H] kernel rows
+    length = jnp.broadcast_to(jnp.asarray(cache.length, jnp.int32), (B,))
+    len_bh = jnp.repeat(length, H)            # [BH]
+    n_comp = (len_bh // nb) * nb              # [BH] compressed extent per row
+    n_buf = len_bh - n_comp                   # [BH] streaming-buffer fill
 
     kwargs = dict(bits=pol.bits, chunk=nb, scale_factor=scale)
     lr = dict(
@@ -88,10 +96,11 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     else:
         acc, m, l = ref_ops.gear_decode_ref(*common, **kwargs, **lr, **sp)
 
-    # merge the fp16 buffer region (n_b tokens, plain XLA)
+    # merge the fp16 buffer region (n_b tokens, plain XLA, per-slot masks)
     s_buf = jnp.einsum("xgd,xnd->xgn", qf,
                        _flat(cache.buf_k, BH).astype(jnp.float32)) * scale
-    s_buf = jnp.where((jnp.arange(nb) < n_buf)[None, None, :], s_buf, NEG_INF)
+    buf_valid = jnp.arange(nb)[None, None, :] < n_buf[:, None, None]
+    s_buf = jnp.where(buf_valid, s_buf, NEG_INF)
     m_buf = jnp.max(s_buf, axis=-1)
     m_tot = jnp.maximum(m, m_buf)
     p_buf = jnp.exp(s_buf - m_tot[..., None])
@@ -100,7 +109,6 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     corr = jnp.exp(m - m_tot)
     l_tot = l * corr + jnp.sum(p_buf, axis=-1)
     out = (acc * corr[..., None] + acc_buf) / jnp.maximum(l_tot[..., None], 1e-30)
-    out = out + poison
     return out.reshape(B, Hq, Dh).astype(q.dtype)
 
 

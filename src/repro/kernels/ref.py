@@ -44,7 +44,7 @@ def gear_decode_ref(
     v_packed: jnp.ndarray,   # [BH, S, L]
     v_scale: jnp.ndarray,    # [BH, S, Gv]
     v_zero: jnp.ndarray,
-    n_comp: jnp.ndarray,     # [] int32 — valid compressed tokens
+    n_comp: jnp.ndarray,     # [] or [BH] int32 — valid compressed tokens
     *,
     bits: int,
     chunk: int,
@@ -56,6 +56,9 @@ def gear_decode_ref(
 ):
     """Unnormalized online-softmax decode attention over a GEAR cache.
 
+    ``n_comp`` may be a scalar (uniform extent) or a per-row ``[BH]`` vector
+    (ragged continuous batches): scores past each row's own extent are
+    masked, so every output row depends only on its own slot's cache.
     Returns (acc [BH, G, Dh] f32 exp-weighted V sum, m [BH, G] score max,
     l [BH, G] sum of exp) so the caller can merge the fp16 buffer region.
     """
@@ -77,8 +80,9 @@ def gear_decode_ref(
         a_c = k_a.astype(f32).reshape(BH, C, chunk, -1)
         s = s + jnp.einsum("xgcr,xcnr->xgcn", qb, a_c).reshape(BH, -1, S)
     s = s * scale_factor
-    valid = jnp.arange(S) < n_comp
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    n_comp = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (BH,))
+    valid = jnp.arange(S)[None, :] < n_comp[:, None]           # [BH, S]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
 
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])

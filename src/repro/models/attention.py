@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import cache as cache_lib
+from repro.kernels import ops as kernel_ops
 from repro.models.common import KeyGen, apply_rope, dense_init, rmsnorm
 
 __all__ = ["attn_params", "attention_train", "attention_decode", "rope_theta_for"]
@@ -127,13 +128,24 @@ def attention_train(cfg: ModelConfig, params, x, positions, kind: str = "global"
 
 
 def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
-                     kind: str = "global"):
+                     kind: str = "global", fused: str = "auto"):
     """One-token attention against a layer cache.
 
     x_t: [B, 1, d]; pos: int32 absolute position — scalar (all slots aligned)
     or [B] (per-slot positions, continuous batching).  Both shapes go through
     the same per-slot RoPE path so wave-mode and spliced-slot decodes are
     bit-identical per batch row.
+
+    ``fused`` selects the attend path for GEAR caches in the fused-kernel
+    layout (:func:`repro.kernels.ops.fused_supported`):
+      "auto"      — fused :func:`repro.kernels.ops.gear_attend` (Pallas
+                    kernel on TPU, jnp oracle elsewhere); ragged-aware, so
+                    mixed-length continuous batches take it too;
+      "interpret" — force the Pallas kernel in interpret mode (CI kernel
+                    lane: exercises kernel code through the serving stack);
+      "off"       — the portable :func:`repro.core.cache.attend` path.
+    The choice is static (layout-based, never length-based) so wave and
+    continuous modes share one numeric program per configuration.
     Returns (out [B, 1, d], new_cache).
     """
     B = x_t.shape[0]
@@ -145,6 +157,12 @@ def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
     new_cache = cache_lib.append_token(cache_cfg, cache, k_t, v_t)
     # NOTE: logit softcap is omitted on the cached-decode path (it only
     # matters for training stability); documented in DESIGN.md.
-    out = cache_lib.attend(cache_cfg, new_cache, q_t, scale=cfg.head_dim ** -0.5)
+    if fused != "off" and kernel_ops.fused_supported(cache_cfg):
+        out = kernel_ops.gear_attend(cache_cfg, new_cache, q_t,
+                                     scale=cfg.head_dim ** -0.5,
+                                     force_kernel=fused == "interpret",
+                                     interpret=fused == "interpret")
+    else:
+        out = cache_lib.attend(cache_cfg, new_cache, q_t, scale=cfg.head_dim ** -0.5)
     out = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x_t.dtype)
     return out, new_cache

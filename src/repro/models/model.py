@@ -64,11 +64,15 @@ class Model:
         return logits, caches
 
     def decode_step(self, params, token_batch: dict, caches, pos,
-                    policy: CompressionPolicy, capacity: int):
+                    policy: CompressionPolicy, capacity: int,
+                    fused: str = "auto"):
         """One decode step.  ``pos`` is a scalar (all slots aligned) or a
-        per-slot ``[B]`` vector of absolute positions (continuous batching)."""
+        per-slot ``[B]`` vector of absolute positions (continuous batching).
+        ``fused``: GEAR attend path — "auto" (fused kernel where the layout
+        supports it, ragged-aware), "interpret" (force the Pallas kernel in
+        interpret mode), or "off" (portable jnp attend)."""
         return tfm.decode_tokens(self.cfg, params, token_batch, caches, pos,
-                                 policy, capacity)
+                                 policy, capacity, fused=fused)
 
     def init_caches(self, policy: CompressionPolicy, batch: int, capacity: int):
         return tfm.init_caches(self.cfg, policy, batch, capacity)

@@ -207,7 +207,7 @@ def _apply_block_train(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
 
 
 def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
-                        batch, capacity):
+                        batch, capacity, fused: str = "auto"):
     if kind == "rwkv":
         h, cache = rwkv_lib.time_mix_decode(cfg, bp, apply_norm(x_t, bp["ln1"], "layernorm"), cache)
         x_t = x_t + h
@@ -218,7 +218,8 @@ def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
     attn_cache, ssm_state = (cache if hybrid else (cache, None))
     ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
     xin = apply_norm(x_t, bp["ln1"], cfg.norm)
-    h, attn_cache = attn_lib.attention_decode(cfg, bp["attn"], xin, pos, attn_cache, ccfg, kind)
+    h, attn_cache = attn_lib.attention_decode(cfg, bp["attn"], xin, pos, attn_cache,
+                                              ccfg, kind, fused=fused)
     if hybrid:
         h2, ssm_state = ssm_lib.ssm_decode(cfg, bp["ssm"], xin, ssm_state)
         h = (h + h2) * 0.5
@@ -309,12 +310,14 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
 
 
 def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
-                  pos, policy: CompressionPolicy, capacity: int):
+                  pos, policy: CompressionPolicy, capacity: int,
+                  fused: str = "auto"):
     """One decode step.  token_batch: {"tokens": [B, 1(...)]}.
 
     ``pos`` is a scalar int32 or a per-slot ``[B]`` vector (continuous
     batching: each batch row decodes at its own absolute position and its
-    layer caches advance at their own per-slot lengths).
+    layer caches advance at their own per-slot lengths).  ``fused`` selects
+    the GEAR attend path (see :func:`repro.models.attention.attention_decode`).
     Returns (logits [B, 1, ...], new caches)."""
     x = embed_tokens(cfg, params, token_batch)
     B = x.shape[0]
@@ -324,7 +327,8 @@ def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
         new_caches = []
         for i, kind in enumerate(cfg.layer_pattern):
             x, nc = _apply_block_decode(cfg, unit_params[i], x, kind, pos,
-                                        unit_caches[i], policy, B, capacity)
+                                        unit_caches[i], policy, B, capacity,
+                                        fused=fused)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

@@ -25,7 +25,9 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core.policy import CompressionPolicy
 from repro.dist import sharding as shd
+from repro.kernels import ops as kernel_ops
 from repro.models.model import Model
+from repro.models.transformer import cache_cfg_for
 from repro.serving.sampling import sample
 
 __all__ = ["EngineConfig", "Engine"]
@@ -39,6 +41,15 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0
     eos_id: int = -1               # -1: never stop early
+    # GEAR decode-attend path: "auto" (fused gear_attend where the cache
+    # layout supports it — kernel on TPU, oracle elsewhere; ragged-aware so
+    # continuous batching takes it too), "interpret" (force the Pallas
+    # kernel in interpret mode — CI kernel lane), "off" (jnp cache.attend).
+    fused: str = "auto"
+
+    def __post_init__(self):
+        if self.fused not in ("auto", "interpret", "off"):
+            raise ValueError(f"fused must be auto/interpret/off, got {self.fused!r}")
 
 
 class Engine:
@@ -64,7 +75,7 @@ class Engine:
             lambda p, b: model.prefill(p, b, ecfg.policy, cap))
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model.decode_step(
-                p, tok, caches, pos, ecfg.policy, cap),
+                p, tok, caches, pos, ecfg.policy, cap, fused=ecfg.fused),
             donate_argnums=(2,))
         # Slot splice: write a batch-1 cache tree over batch row `slot` of the
         # live (donated) cache.  Cache leaves are stacked [R, B, ...], so the
@@ -82,6 +93,23 @@ class Engine:
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
         return (self.ecfg.capacity + nb - 1) // nb * nb
+
+    @property
+    def attend_path(self) -> str:
+        """Decode-attend path compiled into this engine's attention layers:
+        "fused" (gear_attend — Pallas kernel on TPU, jnp oracle elsewhere),
+        "fused-interpret" (kernel forced in interpret mode), or "xla"
+        (no layer qualifies: fp16/window caches, unsupported layouts, or
+        ``fused="off"``).  Checks every kind in the model's layer pattern —
+        local/window layers never fuse, so a model needs at least one
+        GEAR-layout attention layer to report a fused path."""
+        fused_any = any(
+            kernel_ops.fused_supported(cache_cfg_for(
+                self.cfg, kind, self.ecfg.policy, self.ecfg.batch, self._cap()))
+            for kind in self.cfg.layer_pattern if kind != "rwkv")
+        if self.ecfg.fused == "off" or not fused_any:
+            return "xla"
+        return "fused-interpret" if self.ecfg.fused == "interpret" else "fused"
 
     # ------------------------------------------------------------------
     def prefill(self, batch: dict):

@@ -14,7 +14,11 @@ Two scheduling modes over the engine's static batch of B *slots*:
   :meth:`Engine.prefill_slot` batch-row write) while the other slots keep
   decoding undisturbed.  Splice isolation — a spliced request produces
   bit-identical greedy tokens to a solo run — is guaranteed by the per-slot
-  cache layout and batch-invariant compression (see DESIGN.md).
+  cache layout and batch-invariant compression (see DESIGN.md).  Since the
+  fused GEAR decode kernel is ragged-aware (per-slot masking inside the
+  kernel), mixed-length continuous batches run the same fused
+  ``gear_attend`` path as wave mode — ``last_stats["attend_path"]`` reports
+  which path the engine compiled.
 
 Both modes trim each request's results at its own first EOS and report
 per-request prefill/decode latency.
@@ -206,6 +210,7 @@ class Scheduler:
             "decode_s": t_decode_total,
             "decode_steps": steps,
             "tokens": int(sum(len(r.tokens) for r in results)),
+            "attend_path": eng.attend_path,
         }
         return results
 

@@ -20,6 +20,10 @@ def pytest_configure(config):
         "markers",
         "multidevice: re-execs in a subprocess with a fake multi-device CPU "
         "topology (xla_force_host_platform_device_count)")
+    config.addinivalue_line(
+        "markers",
+        "kernel: exercises Pallas kernel code (interpret mode on CPU); the "
+        "CI tests-kernels lane runs `pytest -m kernel`")
 
 
 @pytest.fixture(scope="session")

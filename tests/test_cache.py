@@ -9,7 +9,7 @@ import pytest
 from repro.core import (CacheConfig, named_policy, init_layer_cache,
                         prefill_layer_cache, append_token, attend, dense_kv,
                         reset_slot, prefill_into_slot)
-from repro.kernels.ops import gear_attend
+from repro.kernels.ops import fused_supported, gear_attend
 
 B, H, DH = 2, 2, 64
 
@@ -75,6 +75,43 @@ def test_kernel_ops_path_matches_core():
     o3 = gear_attend(cfg, cache, q, scale=DH**-0.5, force_kernel=True, interpret=True)
     assert jnp.allclose(o2, o3, atol=1e-4)   # oracle == kernel exactly-ish
     assert jnp.allclose(o1, o2, atol=3e-2)   # bf16 vs f32 path
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("pol", ["gear_kcvt4", "gear_kivi2"])
+def test_gear_attend_ragged_per_slot(pol):
+    """Mixed-length batch through the fused path: per-slot masking inside
+    the kernel.  Slot lengths cover empty (0), buffer-only (< chunk), a
+    chunk boundary (buffer empty), and a mixed compressed+buffer length;
+    each populated slot must equal a solo batch-1 fused run bit-for-bit and
+    the jnp attend path within bf16 tolerance."""
+    policy = small_policy(pol)                       # nb = 16
+    lengths = [0, 7, 32, 44]
+    cfg = CacheConfig(batch=4, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    assert fused_supported(cfg)
+    key = jax.random.PRNGKey(3)
+    k = jax.random.normal(key, (4, H, 44, DH))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (4, H, 44, DH))
+    cache = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
+    cache = reset_slot(cfg, cache, 0)
+    for s, n in ((1, 7), (2, 32)):
+        cache = prefill_into_slot(cfg, cache, k[s:s + 1, :, :n], v[s:s + 1, :, :n], s)
+    assert [int(x) for x in cache.length] == lengths
+
+    q = jax.random.normal(jax.random.PRNGKey(9), (4, H * 2, DH))
+    o_ref = gear_attend(cfg, cache, q, scale=DH**-0.5)
+    o_krn = gear_attend(cfg, cache, q, scale=DH**-0.5,
+                        force_kernel=True, interpret=True)
+    o_jnp = attend(cfg, cache, q, scale=DH**-0.5)
+    assert jnp.allclose(o_krn, o_ref, atol=1e-4)     # kernel == oracle
+    assert (o_ref[0] == 0).all()                     # empty slot attends nothing
+    cfg1 = dataclasses.replace(cfg, batch=1)
+    for s, n in ((1, 7), (2, 32), (3, 44)):
+        solo = prefill_layer_cache(cfg1, init_layer_cache(cfg1),
+                                   k[s:s + 1, :, :n], v[s:s + 1, :, :n])
+        o_solo = gear_attend(cfg1, solo, q[s:s + 1], scale=DH**-0.5)
+        assert jnp.allclose(o_ref[s:s + 1], o_solo, rtol=1e-6, atol=1e-6), s
+        assert jnp.allclose(o_ref[s], o_jnp[s], atol=3e-2), s  # f32 vs bf16 path
 
 
 def test_append_jit_cond_static():

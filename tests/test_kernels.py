@@ -12,6 +12,8 @@ from repro.kernels.gear_decode import gear_decode
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels import ref
 
+pytestmark = pytest.mark.kernel
+
 
 @pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("N,n,d", [(4, 64, 128), (2, 16, 64), (1, 64, 256), (8, 32, 32)])
@@ -87,6 +89,50 @@ def test_gear_decode_sweep(polname, G, Dh, S, rng):
     out_r = acc_r / l_r[..., None]
     out_k = acc_k / l_k[..., 0:1]
     assert jnp.allclose(out_k, out_r, atol=1e-4), float(jnp.abs(out_k - out_r).max())
+
+
+@pytest.mark.parametrize("polname", ["gear_kivi2", "gear_kcvt4", "kivi2"])
+def test_gear_decode_ragged_sweep(polname, rng):
+    """Per-row compressed extents: the ragged kernel matches the ragged
+    oracle, and every row matches a solo (batch-of-one) oracle call at that
+    row's scalar extent — extents cover empty (0), one chunk, a mid-cache
+    chunk boundary, and the full cache."""
+    nb = 32
+    cfg, common, extras = _cache_arrays(polname, B=2, H=2, Dh=64, S=128,
+                                        n=128, nb=nb)
+    arrays = common[:-1]
+    q = jax.random.normal(rng, (4, 2, 64))
+    kwargs = dict(bits=cfg.policy.bits, chunk=nb, scale_factor=64**-0.5)
+    n_comp = jnp.asarray([0, nb, 3 * nb, 4 * nb], jnp.int32)   # one per bh row
+
+    acc_r, m_r, l_r = ref.gear_decode_ref(q, *arrays, n_comp, **kwargs, **extras)
+    acc_k, m_k, l_k = gear_decode(q, *arrays, n_comp, interpret=True,
+                                  **kwargs, **extras)
+    assert jnp.allclose(m_k[..., 0], m_r, atol=1e-4)
+    assert jnp.allclose(acc_k / l_k[..., 0:1], acc_r / l_r[..., None], atol=1e-4)
+
+    # row independence: each ragged row == a solo call at its scalar extent
+    for x in range(1, 4):                                      # skip the empty row
+        sl = lambda a: None if a is None else a[x:x + 1]
+        acc_s, m_s, l_s = ref.gear_decode_ref(
+            q[x:x + 1], *[sl(a) for a in arrays], n_comp[x], **kwargs,
+            **{k: sl(v) for k, v in extras.items()})
+        assert jnp.allclose(acc_r[x:x + 1], acc_s, rtol=1e-6, atol=1e-6)
+        assert jnp.allclose(m_r[x:x + 1], m_s) and jnp.allclose(l_r[x:x + 1], l_s)
+
+
+def test_gear_decode_scalar_extent_still_accepted(rng):
+    """Back-compat: a scalar n_comp broadcasts to every row."""
+    cfg, common, extras = _cache_arrays("gear_kcvt4", Dh=64, S=64, n=64, nb=32)
+    arrays, scalar = common[:-1], common[-1]
+    q = jax.random.normal(rng, (4, 2, 64))
+    kwargs = dict(bits=cfg.policy.bits, chunk=32, scale_factor=64**-0.5)
+    vec = jnp.full((4,), scalar, jnp.int32)
+    for fn in (ref.gear_decode_ref,
+               lambda *a, **k: gear_decode(*a, interpret=True, **k)):
+        acc_s, m_s, l_s = fn(q, *arrays, scalar, **kwargs, **extras)
+        acc_v, m_v, l_v = fn(q, *arrays, vec, **kwargs, **extras)
+        assert (acc_s == acc_v).all() and (m_s == m_v).all() and (l_s == l_v).all()
 
 
 @pytest.mark.parametrize("S,Dh,bq,bk", [(128, 64, 32, 32), (256, 128, 64, 64),

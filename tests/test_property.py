@@ -148,6 +148,46 @@ def test_continuous_batching_serves_every_request_once(seed, n_reqs, data):
         assert r.tokens.dtype == np.int32
 
 
+@pytest.mark.kernel
+@given(len0=st.integers(0, 32), len1=st.integers(0, 32),
+       seed=st.integers(0, 2**10))
+@settings(max_examples=8, deadline=None)
+def test_fused_ragged_attend_matches_jnp_per_slot(len0, len1, seed):
+    """ANY pair of per-slot lengths (0 / buffer-only / chunk-boundary /
+    mixed): the ragged fused path (oracle AND interpret-mode Pallas kernel)
+    agrees with the per-slot jnp attend, slot by slot."""
+    from repro.core import (CacheConfig, named_policy, init_layer_cache,
+                            prefill_layer_cache, attend, reset_slot,
+                            prefill_into_slot)
+    from repro.kernels.ops import gear_attend
+    key = jax.random.PRNGKey(seed)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=8,
+                              rank=2, rank_decode=2)
+    B, H, DH = 2, 2, 32
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=32, policy=pol)
+    cache = init_layer_cache(cfg)
+    for s, n in enumerate((len0, len1)):
+        if n == 0:
+            cache = reset_slot(cfg, cache, s)
+            continue
+        ks = jax.random.normal(jax.random.fold_in(key, s), (1, H, n, DH))
+        vs = jax.random.normal(jax.random.fold_in(key, 10 + s), (1, H, n, DH))
+        cache = prefill_into_slot(cfg, cache, ks, vs, s)
+    assert [int(x) for x in cache.length] == [len0, len1]
+    q = jax.random.normal(jax.random.fold_in(key, 99), (B, H * 2, DH))
+    o_fused = gear_attend(cfg, cache, q, scale=DH**-0.5)
+    o_kern = gear_attend(cfg, cache, q, scale=DH**-0.5,
+                         force_kernel=True, interpret=True)
+    o_jnp = attend(cfg, cache, q, scale=DH**-0.5)
+    np.testing.assert_allclose(np.asarray(o_kern), np.asarray(o_fused), atol=1e-4)
+    for s, n in enumerate((len0, len1)):
+        if n == 0:
+            assert (np.asarray(o_fused[s]) == 0).all()
+        else:
+            np.testing.assert_allclose(np.asarray(o_fused[s]), np.asarray(o_jnp[s]),
+                                       atol=3e-2)
+
+
 @given(n_prefill=st.integers(5, 40), n_decode=st.integers(0, 12),
        seed=st.integers(0, 2**10))
 @settings(max_examples=8, deadline=None)

@@ -1,0 +1,105 @@
+"""The CI bench regression gate (benchmarks/check_regression.py): the gate
+must pass an intentionally-clean run and fail an intentionally-broken one —
+throughput regressions past tolerance, any cache-byte growth, and silently
+missing metrics all have to trip it."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import DEFAULT_BASELINE, check, governed, main
+
+
+BASE = {
+    "throughput_fused/decode_tok_per_s_fused": 400.0,
+    "throughput_fused/fused_over_xla": 1.4,
+    "cache_nbytes/bench_engine_gear": 1000,
+}
+
+
+def _rows(**over):
+    rows = {"throughput_fused/decode_tok_per_s_fused": 400.0,
+            "throughput_fused/fused_over_xla": 1.4,
+            "cache_nbytes/bench_engine_gear": 1000}
+    rows.update(over)
+    return rows
+
+
+def test_clean_run_passes():
+    assert check(BASE, _rows(), tol=0.15) == []
+    # within-tolerance jitter and improvements also pass
+    assert check(BASE, _rows(**{
+        "throughput_fused/decode_tok_per_s_fused": 360.0,     # -10%
+        "cache_nbytes/bench_engine_gear": 900,                # bytes shrank
+    }), tol=0.15) == []
+
+
+def test_throughput_regression_fails():
+    fails = check(BASE, _rows(**{
+        "throughput_fused/decode_tok_per_s_fused": 300.0}), tol=0.15)  # -25%
+    assert len(fails) == 1 and "decode_tok_per_s" in fails[0]
+
+
+def test_ratio_regression_fails():
+    """fused-over-XLA collapsing toward 1.0 = fused path silently fell back."""
+    fails = check(BASE, _rows(**{"throughput_fused/fused_over_xla": 1.0}),
+                  tol=0.15)
+    assert len(fails) == 1 and "fused_over_xla" in fails[0]
+
+
+def test_any_cache_byte_growth_fails():
+    fails = check(BASE, _rows(**{"cache_nbytes/bench_engine_gear": 1001}),
+                  tol=0.15)
+    assert len(fails) == 1 and "nbytes" in fails[0]
+
+
+def test_missing_metric_fails():
+    rows = _rows()
+    del rows["cache_nbytes/bench_engine_gear"]
+    fails = check(BASE, rows, tol=0.15)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_governed_name_families():
+    assert governed("throughput_fused/decode_tok_per_s_fused")
+    assert governed("cache_nbytes/bench_engine_gear")
+    assert governed("throughput_sched/continuous_over_wave")
+    assert not governed("table9_kvsize/gear_kcvt4")
+
+
+def test_end_to_end_exit_codes(tmp_path):
+    """main() over real files: clean exits 0, broken exits 1, derate scales
+    only the absolute tok/s floors at --write-baseline time."""
+    out = tmp_path / "bench-out"
+    out.mkdir()
+    rows = [{"name": n, "us_per_call": 0.0, "derived": "", "value": v}
+            for n, v in _rows().items()]
+    (out / "t.json").write_text(json.dumps(rows))
+    baseline = tmp_path / "baseline.json"
+    assert main([str(out), "--baseline", str(baseline),
+                 "--write-baseline", "--derate", "0.5"]) == 0
+    written = json.loads(baseline.read_text())
+    assert written["throughput_fused/decode_tok_per_s_fused"] == 200.0  # derated
+    assert written["throughput_fused/fused_over_xla"] == 1.4            # exact
+    assert written["cache_nbytes/bench_engine_gear"] == 1000            # exact
+
+    assert main([str(out), "--baseline", str(baseline)]) == 0
+    broken = [dict(r, value=r["value"] + 1 if "nbytes" in r["name"] else r["value"])
+              for r in rows]
+    (out / "t.json").write_text(json.dumps(broken))
+    assert main([str(out), "--baseline", str(baseline)]) == 1
+
+
+def test_committed_baseline_is_governed_and_loadable():
+    """The checked-in baseline only names metrics the gate governs."""
+    with open(DEFAULT_BASELINE) as f:
+        base = json.load(f)
+    assert base, "committed baseline is empty"
+    for name, val in base.items():
+        assert governed(name), name
+        assert isinstance(val, (int, float))
+
+
+def test_empty_bench_dir_is_loud(tmp_path):
+    with pytest.raises(SystemExit):
+        main([str(tmp_path / "nothing"), "--baseline", "x.json"])

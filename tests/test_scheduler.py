@@ -124,6 +124,64 @@ def test_continuous_per_request_latency_and_budgets():
     assert sched.last_stats["decode_steps"] > 0
 
 
+@pytest.mark.kernel
+def test_splice_isolation_through_interpret_kernel():
+    """Continuous batching with the REAL Pallas kernel (interpret mode on
+    CPU): mixed-length batches dispatch the ragged fused path end to end and
+    every request still matches its solo run token for token."""
+    cfg, pol = KINDS["gear"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(batch=3, capacity=48, policy=pol, eos_id=EOS,
+                        fused="interpret")
+    eng = Engine(model, params, ecfg)
+    solo = Engine(model, params, dataclasses.replace(ecfg, batch=1))
+    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    reqs = _requests(4)
+    for r in reqs:
+        sched.submit(r)
+    out = {r.rid: r.tokens for r in sched.run_continuous()}
+    assert sched.last_stats["attend_path"] == "fused-interpret"
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.rid], _solo_reference(solo, r),
+            err_msg=f"interpret-kernel rid {r.rid} diverged from its solo run")
+
+
+def test_decode_dispatches_fused_gear_attend(monkeypatch):
+    """The engine's decode program routes GEAR layers through gear_attend
+    (the fused path) — including for mixed-length position vectors — and
+    fp16 engines stay on the jnp attend path."""
+    from repro.kernels import ops as kernel_ops
+
+    calls = []
+    real = kernel_ops.gear_attend
+
+    def spy(*a, **kw):
+        calls.append(kw.get("force_kernel", False))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kernel_ops, "gear_attend", spy)
+    cfg, pol = KINDS["gear"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(batch=2, capacity=48, policy=pol))
+    assert eng.attend_path == "fused"
+    caches = eng.init_caches()
+    tb = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    eng.decode(tb, caches, jnp.asarray([5, 17], jnp.int32))   # mixed lengths
+    assert calls, "decode trace never reached gear_attend"
+    assert not any(calls)                                     # real kernel path, not forced
+
+    calls.clear()
+    fcfg, fpol = KINDS["fp16"]
+    feng = Engine(build_model(fcfg), build_model(fcfg).init(jax.random.PRNGKey(0)),
+                  EngineConfig(batch=2, capacity=48, policy=fpol))
+    assert feng.attend_path == "xla"
+    feng.decode(tb, feng.init_caches(), jnp.asarray([0, 0], jnp.int32))
+    assert not calls
+
+
 # ---------------------------------------------------------------------------
 # Wave-mode satellite fixes
 
