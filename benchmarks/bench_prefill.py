@@ -1,0 +1,118 @@
+"""Streaming vs monolithic prefill: throughput + measured peak live bytes.
+
+The paper's headline is throughput *and* peak memory (up to 2.29x smaller
+peak); this bench pins the prefill half of that claim on the serving stack:
+
+* **peak live bytes** — XLA's compiled memory analysis (temp workspace +
+  outputs) of the jitted ``Model.prefill`` program for each mode.  The
+  monolithic pipeline materializes every layer's full FP16 K/V (stacked
+  across the layer scan) before one batched compression event; streaming
+  prefill holds the compressed cache plus one ``n_b``-token chunk, so its
+  peak must be far below 0.75x monolithic at 4k-token prompts.
+* **prefill tok/s** — median wall time over the same 4k-token prompt with a
+  paper-geometry GEAR cache (Dh=128, n_b=64, GEAR-KCVT-4bit).  Streaming
+  attends the compressed history through chunk-prefix views (most of the
+  causal triangle is skipped), so it must land within 10% of (CPU: typically
+  above) the monolithic path.
+
+Both gates are enforced in-bench and, via the ``value`` rows, by the CI
+regression gate (benchmarks/check_regression.py): ``prefill_tok_per_s/*``
+rows under the throughput rule, ``prefill_peak_bytes/*`` rows under the
+any-meaningful-growth rule, and the two ``*_over_*`` ratio rows as the
+machine-independent guard.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import ModelConfig
+from repro.core.policy import named_policy
+from repro.models.model import build_model
+
+# Paper-geometry KV cache (llama-class head_dim / chunk / policy) on a
+# reduced residual stream so the bench runs on CPU in CI.
+BENCH_CFG = ModelConfig(name="bench-prefill", family="dense", num_layers=2,
+                        d_model=256, num_heads=4, num_kv_heads=2,
+                        head_dim=128, d_ff=512, vocab_size=512)
+PROMPT_LEN = 4096
+PEAK_LIMIT = 0.75   # streaming peak must be below this fraction of monolithic
+TOKS_FLOOR = 0.90   # and within 10% of monolithic tok/s (or better)
+
+
+def _peak_bytes(compiled) -> int:
+    """Peak live bytes of one compiled prefill: temp workspace + outputs."""
+    ma = compiled.memory_analysis()
+    return int(ma.temp_size_in_bytes + ma.output_size_in_bytes)
+
+
+def _measure(model, params, policy, mode: str, iters: int):
+    batch = {"tokens": jnp.zeros((1, PROMPT_LEN), jnp.int32)}
+    fn = jax.jit(lambda p, b: model.prefill(p, b, policy, PROMPT_LEN,
+                                            prefill_mode=mode))
+    compiled = fn.lower(params, batch).compile()
+    peak = _peak_bytes(compiled)
+    # time the AOT executable directly — on jax 0.4.x the lowered/compiled
+    # program never enters the jit dispatch cache, so calling fn() here
+    # would silently recompile the whole 4k-token prefill
+    jax.block_until_ready(compiled(params, batch))
+    ts = []
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(compiled(params, batch))
+        ts.append(time.time() - t0)
+    ts.sort()
+    return peak, PROMPT_LEN / ts[len(ts) // 2]
+
+
+def run(key=None, smoke: bool = False):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    policy = named_policy("gear_kcvt4")
+    model = build_model(BENCH_CFG)
+    params = model.init(key)
+    iters = 3 if smoke else 5
+
+    out = {}
+    for mode in ("monolithic", "streaming"):
+        peak, tok_s = _measure(model, params, policy, mode, iters)
+        out[mode] = (peak, tok_s)
+        emit(f"prefill_peak_bytes/{mode}", 0.0,
+             f"{peak} temp+output bytes (S={PROMPT_LEN}, gear_kcvt4)",
+             value=peak)
+        emit(f"prefill_tok_per_s/{mode}", 0.0, f"{tok_s:.0f} tok/s",
+             value=tok_s)
+
+    mem_ratio = out["monolithic"][0] / max(out["streaming"][0], 1)
+    tok_ratio = out["streaming"][1] / out["monolithic"][1]
+    emit("prefill_mem/monolithic_over_streaming", 0.0,
+         f"{mem_ratio:.2f}x smaller streaming peak (gate: > {1 / PEAK_LIMIT:.2f}x)",
+         value=mem_ratio)
+    emit("prefill_tok_per_s/streaming_over_monolithic", 0.0,
+         f"{tok_ratio:.2f}x (gate: >= {TOKS_FLOOR:.2f})", value=tok_ratio)
+
+    assert mem_ratio > 1 / PEAK_LIMIT, (
+        f"streaming prefill peak {out['streaming'][0]} not < "
+        f"{PEAK_LIMIT} x monolithic {out['monolithic'][0]}")
+    assert tok_ratio >= TOKS_FLOOR, (
+        f"streaming prefill {tok_ratio:.2f}x of monolithic tok/s "
+        f"(floor {TOKS_FLOOR})")
+    return mem_ratio, tok_ratio
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing iterations (CI)")
+    ap.add_argument("--json", default=None,
+                    help="also write the emitted rows to this JSON file")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)

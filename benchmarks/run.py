@@ -22,10 +22,12 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import bench_error, bench_kvsize, bench_memory, \
-        bench_throughput, bench_ablation, bench_adaptive, bench_state_quant
+        bench_prefill, bench_throughput, bench_ablation, bench_adaptive, \
+        bench_state_quant
     bench_error.run()
     bench_kvsize.run()
     bench_memory.run()
+    bench_prefill.run(smoke=True)
     bench_throughput.run()
     bench_ablation.run()
     bench_adaptive.run()

@@ -9,12 +9,14 @@ from repro.core.cache import (
     WindowLayerCache,
     init_layer_cache,
     prefill_layer_cache,
+    streaming_prefill_layer_cache,
     append_token,
     attend,
     dense_kv,
     splice_slot,
     reset_slot,
     prefill_into_slot,
+    fresh_batch1_cache,
 )
 from repro.core.metrics import kv_size_breakdown, kv_size_fraction
 
@@ -22,7 +24,8 @@ __all__ = [
     "CompressionPolicy", "FP16", "GEAR_DEFAULT", "named_policy",
     "CompressedMatrix", "compress_matrix", "decompress_matrix", "approx_error",
     "CacheConfig", "GEARLayerCache", "FP16LayerCache", "WindowLayerCache",
-    "init_layer_cache", "prefill_layer_cache", "append_token", "attend", "dense_kv",
-    "splice_slot", "reset_slot", "prefill_into_slot",
+    "init_layer_cache", "prefill_layer_cache", "streaming_prefill_layer_cache",
+    "append_token", "attend", "dense_kv",
+    "splice_slot", "reset_slot", "prefill_into_slot", "fresh_batch1_cache",
     "kv_size_breakdown", "kv_size_fraction",
 ]

@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gear as gear_lib
+from repro.core import lowrank as lr_lib
+from repro.core import outlier as ol_lib
 from repro.core import packing
 from repro.core.policy import CompressionPolicy
 
@@ -62,12 +64,16 @@ __all__ = [
     "WindowLayerCache",
     "init_layer_cache",
     "prefill_layer_cache",
+    "streaming_supported",
+    "streaming_prefill_pipeline",
+    "streaming_prefill_layer_cache",
     "append_token",
     "attend",
     "dense_kv",
     "splice_slot",
     "reset_slot",
     "prefill_into_slot",
+    "fresh_batch1_cache",
 ]
 
 NEG_INF = -1e30
@@ -248,12 +254,21 @@ def _slot_rows_update(dst: jnp.ndarray, vals: jnp.ndarray, start: jnp.ndarray,
 
 
 def _compress_chunks(cfg: CacheConfig, k: jnp.ndarray, v: jnp.ndarray,
-                     rank: int, key: jax.Array):
+                     rank: int, key: jax.Array, fused: str = "off"):
     """Compress ``k``/``v`` [B, H, C', nb, Dh] -> dict of per-chunk arrays.
 
     C' is the number of chunks being compressed in this event (prefill: many,
     decode: 1).  Low-rank factors are zero-padded to ``policy.rank`` columns.
+
+    ``fused`` selects the quantize/pack/stats/outlier implementation:
+    "off" — :func:`repro.core.gear.compress_matrix` (plain XLA);
+    "auto" — the fused ``gear_compress`` Pallas kernel on TPU, its bit-exact
+    jnp oracle elsewhere; "interpret" — force the kernel in interpret mode
+    (CI kernel lane).  The power-iteration low-rank step always runs in XLA,
+    on the kernel-emitted quantization residual of this event's chunks only.
     """
+    if fused != "off":
+        return _compress_chunks_fused(cfg, k, v, rank, key, fused)
     pol = cfg.policy
     out = {}
     for name, x, kind in (("k", k, "k"), ("v", v, "v")):
@@ -274,10 +289,85 @@ def _compress_chunks(cfg: CacheConfig, k: jnp.ndarray, v: jnp.ndarray,
     return out
 
 
+def _compress_chunks_fused(cfg: CacheConfig, k: jnp.ndarray, v: jnp.ndarray,
+                           rank: int, key: jax.Array, fused: str):
+    """Fused-kernel twin of :func:`_compress_chunks` (same output layout)."""
+    from repro.kernels import ops as kernel_ops  # lazy: kernels import us
+
+    pol = cfg.policy
+    force = fused == "interpret"
+    out = {}
+    for name, x, kind in (("k", k, "k"), ("v", v, "v")):
+        scheme, group = pol.scheme_for(kind)
+        B, H, C, nb, Dh = x.shape
+        vec_len = nb if scheme == "per_channel" else Dh
+        n_out = ol_lib.outlier_count(vec_len, pol.sparsity) if pol.use_sparse else 0
+        packed, scale, zero, spv, spi, resid = kernel_ops.gear_compress_chunks(
+            x.reshape(B * H * C, nb, Dh), bits=pol.bits, scheme=scheme,
+            group=group, n_out=n_out, stat_dtype=pol.stat_dtype,
+            force_kernel=force, interpret=force)
+        lead = (B, H, C)
+        out[f"{name}_packed"] = packed.reshape(lead + packed.shape[1:])
+        out[f"{name}_scale"] = scale.reshape(lead + scale.shape[1:]).astype(jnp.bfloat16)
+        out[f"{name}_zero"] = zero.reshape(lead + zero.shape[1:]).astype(jnp.bfloat16)
+        if pol.use_lowrank:
+            a, b = lr_lib.power_iteration(resid.reshape(lead + (nb, Dh)), rank,
+                                          pol.power_iters, key)
+            a = a.astype(jnp.bfloat16)
+            b = b.astype(jnp.bfloat16)
+            pad = pol.rank - rank
+            if pad:
+                a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+                b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+            out[f"{name}_a"], out[f"{name}_b"] = a, b
+        if pol.use_sparse:
+            out[f"{name}_sp_val"] = spv.reshape(lead + spv.shape[1:]).astype(jnp.bfloat16)
+            out[f"{name}_sp_idx"] = spi.reshape(lead + spi.shape[1:]).astype(jnp.int32)
+    return out
+
+
 def _flatten_stat(cfg: CacheConfig, stat: jnp.ndarray, kind: str) -> jnp.ndarray:
     """[B,H,C',rows_per_chunk,cols] -> [B,H,C'*rows_per_chunk,cols]."""
     B, H = stat.shape[0], stat.shape[1]
     return stat.reshape(B, H, -1, stat.shape[-1])
+
+
+def _store_prefill_chunks(cfg: CacheConfig, upd: dict, comp: dict,
+                          n_full: int) -> dict:
+    """Write one compression event's ``C' = n_full / n_b`` chunks (token 0
+    onward) into the cache arrays of ``upd``.  Shared by monolithic prefill
+    (one batched event) and streaming prefill (per-chunk events stacked by
+    the compression scan — same layout either way)."""
+    pol = cfg.policy
+    B, H = upd["k_packed"].shape[:2]
+    z4 = (0, 0, 0, 0)
+    upd["k_packed"] = jax.lax.dynamic_update_slice(
+        upd["k_packed"], comp["k_packed"].reshape(B, H, n_full, -1), z4)
+    upd["v_packed"] = jax.lax.dynamic_update_slice(
+        upd["v_packed"], comp["v_packed"].reshape(B, H, n_full, -1), z4)
+    for kv in ("k", "v"):
+        stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
+        stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
+        upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(upd[f"{kv}_scale"], stat_s, z4)
+        upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(upd[f"{kv}_zero"], stat_z, z4)
+        if pol.use_lowrank:
+            a = comp[f"{kv}_a"].reshape(B, H, n_full, pol.rank)
+            upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(upd[f"{kv}_a"], a, z4)
+            upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
+                upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, 0, 0, 0))
+        if pol.use_sparse:
+            sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
+            if kv == "v" or cfg.k_scheme()[0] != "per_channel":
+                sv = sv.reshape(B, H, n_full, sv.shape[-1])
+                si = si.reshape(B, H, n_full, si.shape[-1])
+                upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_val"], sv, z4)
+                upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_idx"], si, z4)
+            else:
+                upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
+                    upd[f"{kv}_sp_val"], sv, (0, 0, 0, 0, 0))
+                upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
+                    upd[f"{kv}_sp_idx"], si, (0, 0, 0, 0, 0))
+    return upd
 
 
 def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
@@ -314,36 +404,13 @@ def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
     upd = {f.name: getattr(cache, f.name) for f in dataclasses.fields(GEARLayerCache)}
     if C_new > 0:
         B, H, _, Dh = k.shape
-        kc = k[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh)
-        vc = v[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh)
+        # f32 compression inputs: numerically identical for bf16 K/V (exact
+        # widening; every internal step is f32 already) but avoids lax.top_k
+        # on bf16, which hits a ~20x slower sort path on CPU
+        kc = k[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh).astype(jnp.float32)
+        vc = v[:, :, :n_full, :].reshape(B, H, C_new, nb, Dh).astype(jnp.float32)
         comp = _compress_chunks(cfg, kc, vc, pol.rank, key)
-        z4 = (0, 0, 0, 0)
-        upd["k_packed"] = jax.lax.dynamic_update_slice(
-            upd["k_packed"], comp["k_packed"].reshape(B, H, n_full, -1), z4)
-        upd["v_packed"] = jax.lax.dynamic_update_slice(
-            upd["v_packed"], comp["v_packed"].reshape(B, H, n_full, -1), z4)
-        for kv in ("k", "v"):
-            stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
-            stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
-            upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(upd[f"{kv}_scale"], stat_s, z4)
-            upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(upd[f"{kv}_zero"], stat_z, z4)
-            if pol.use_lowrank:
-                a = comp[f"{kv}_a"].reshape(B, H, n_full, pol.rank)
-                upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(upd[f"{kv}_a"], a, z4)
-                upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
-                    upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, 0, 0, 0))
-            if pol.use_sparse:
-                sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
-                if kv == "v" or cfg.k_scheme()[0] != "per_channel":
-                    sv = sv.reshape(B, H, n_full, sv.shape[-1])
-                    si = si.reshape(B, H, n_full, si.shape[-1])
-                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_val"], sv, z4)
-                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_idx"], si, z4)
-                else:
-                    upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_val"], sv, (0, 0, 0, 0, 0))
-                    upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
-                        upd[f"{kv}_sp_idx"], si, (0, 0, 0, 0, 0))
+        upd = _store_prefill_chunks(cfg, upd, comp, n_full)
     rem = n - n_full
     if rem:
         upd["buf_k"] = jax.lax.dynamic_update_slice(
@@ -352,6 +419,227 @@ def prefill_layer_cache(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
             upd["buf_v"], v[:, :, n_full:, :].astype(upd["buf_v"].dtype), (0, 0, 0, 0))
     upd["length"] = full_len
     return GEARLayerCache(**upd)
+
+
+def _attend_segments(n_chunks: int, segments: int = 4) -> list[tuple[int, int]]:
+    """Equal [lo, hi) chunk segments for the prefix-view attend scans."""
+    segments = min(segments, n_chunks)
+    bounds = [round(n_chunks * j / segments) for j in range(segments + 1)]
+    return [(lo, hi) for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+
+
+def chunk_prefix_view(cfg: CacheConfig, cache, n_chunks: int):
+    """Static view of the first ``n_chunks`` chunks of a GEAR cache.
+
+    The streaming attend scan runs in segments, each against the shortest
+    chunk prefix covering its queries — recovering most of the causal
+    triangle the monolithic score matrix pays in full.  Scores beyond each
+    query's own ``n_comp`` mask are exact zeros after the softmax either
+    way, so segmenting only changes float accumulation width, never the
+    math.  Buffer/length leaves pass through untouched.
+    """
+    if n_chunks >= cfg.n_chunks:
+        return cache
+    S_pre = n_chunks * cfg.chunk
+    pol = cfg.policy
+    scheme, group = cfg.k_scheme()
+    if scheme == "per_channel":
+        g = cfg.chunk if group is None else group
+        k_rows = n_chunks * (cfg.chunk // g)
+    else:
+        k_rows = S_pre
+    d = dict(
+        k_packed=cache.k_packed[:, :, :S_pre],
+        v_packed=cache.v_packed[:, :, :S_pre],
+        k_scale=cache.k_scale[:, :, :k_rows],
+        k_zero=cache.k_zero[:, :, :k_rows],
+        v_scale=cache.v_scale[:, :, :S_pre],
+        v_zero=cache.v_zero[:, :, :S_pre],
+    )
+    if pol.use_lowrank:
+        d.update(k_a=cache.k_a[:, :, :S_pre], v_a=cache.v_a[:, :, :S_pre],
+                 k_b=cache.k_b[:, :, :n_chunks], v_b=cache.v_b[:, :, :n_chunks])
+    if pol.use_sparse:
+        per_channel = scheme == "per_channel"
+        d.update(
+            k_sp_val=cache.k_sp_val[:, :, :n_chunks if per_channel else S_pre],
+            k_sp_idx=cache.k_sp_idx[:, :, :n_chunks if per_channel else S_pre],
+            v_sp_val=cache.v_sp_val[:, :, :S_pre],
+            v_sp_idx=cache.v_sp_idx[:, :, :S_pre],
+        )
+    return dataclasses.replace(cache, **d)
+
+
+def _assemble_scanned_chunks(cfg: CacheConfig, upd: dict, comp_s: dict,
+                             n_full: int) -> dict:
+    """Stack a compression scan's per-chunk outputs (leaves [C', B, H, 1,
+    ...]) into the batched-event layout and store them from token 0."""
+    B, H = upd["k_packed"].shape[:2]
+
+    def stack(t):
+        C = t.shape[0]
+        return jnp.moveaxis(t, 0, 2).reshape((B, H, C) + t.shape[4:])
+
+    return _store_prefill_chunks(cfg, upd, {kk: stack(t) for kk, t in comp_s.items()},
+                                 n_full)
+
+
+def streaming_supported(cfg: CacheConfig) -> bool:
+    """True when this layer cache can take the streaming prefill pipeline.
+
+    The history scorer (``gear_decode`` / its oracles) streams one K-stat
+    row per chunk, so — exactly like the fused decode path
+    (:func:`repro.kernels.ops.fused_supported`) — it needs a GEAR cache
+    with per-channel K quantization at chunk granularity.  Static; callers
+    fall back to monolithic prefill when False.
+    """
+    if cfg.kind != "gear" or cfg.policy.is_fp16:
+        return False
+    scheme, group = cfg.k_scheme()
+    if scheme != "per_channel":
+        return False
+    return (cfg.chunk if group is None else group) == cfg.chunk
+
+
+def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
+                               tail_x, project, scale: float,
+                               key: jax.Array | None = None,
+                               fused: str = "auto"):
+    """Shared driver of the streaming chunked prefill (compress-as-you-go).
+
+    ``chunk_xs`` is a pytree of per-chunk inputs with a leading ``[C']``
+    axis and ``tail_x`` the leftover-token inputs (or None);
+    ``project(x) -> (q [B, Hq, T, Dh], k, v [B, H, T, Dh])`` maps either to
+    the chunk's attention inputs — the model layer passes the raw residual-
+    stream chunk and projects Q/K/V *inside the scans*, so the full-sequence
+    FP16 K/V never exists.  Two carry-free ``lax.scan`` passes (loop fission
+    of the compress-as-you-go loop — same dataflow, no per-step cache-carry
+    copies):
+
+    1. **Compression scan** — each chunk runs its compression event
+       (:func:`_compress_chunks`, optionally through the fused
+       ``gear_compress`` kernel); the stacked outputs are stored into the
+       packed arrays in one shot (identical layout to the monolithic
+       batched event).
+    2. **Attend scan** — each chunk's queries attend the compressed history
+       *before* their own chunk (scores masked at ``c · n_b``, factored
+       ``gear_decode`` machinery) plus the in-flight FP16 chunk via a
+       two-piece online softmax (:func:`repro.kernels.ops.gear_attend_block`),
+       in segments over static chunk-prefix views.  Masking makes this
+       bitwise identical to interleaving the two scans.
+
+    Leftover tokens attend the same way (against the prefix view of the
+    populated chunks only) and land in the FP16 streaming buffer.  Returns
+    (cache, attn_out [B, Hq, n, Dh]).
+    """
+    if not streaming_supported(cfg):
+        raise ValueError(
+            "streaming prefill requires a GEAR cache with per-channel K "
+            f"stats at chunk granularity (got kind={cfg.kind!r}, "
+            f"k_scheme={cfg.k_scheme()!r}, chunk={cfg.chunk})")
+    from repro.kernels import ops as kernel_ops  # lazy: kernels import us
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    pol = cfg.policy
+    nb = cfg.chunk
+    C_new = n // nb
+    n_full = C_new * nb
+    rem = n - n_full
+    force = fused == "interpret"
+    oracle = fused == "off"          # pin the jnp oracles even on TPU
+    B = cache.length.shape[0]
+    Dh = cfg.head_dim
+
+    outs = []
+    if C_new:
+        def body_compress(_, x_c):
+            _, k_c, v_c = project(x_c)
+            comp = _compress_chunks(
+                cfg, k_c[:, :, None].astype(jnp.float32),
+                v_c[:, :, None].astype(jnp.float32), pol.rank, key, fused=fused)
+            return None, comp
+
+        _, comp_s = jax.lax.scan(body_compress, None, chunk_xs)
+        upd = {f.name: getattr(cache, f.name)
+               for f in dataclasses.fields(GEARLayerCache)}
+        cache = GEARLayerCache(**_assemble_scanned_chunks(cfg, upd, comp_s, n_full))
+
+        out_parts = []
+        for lo, hi in _attend_segments(C_new):
+            view = chunk_prefix_view(cfg, cache, hi)
+
+            def body_attend(_, xs, view=view):
+                c, x_c = xs
+                q_c, k_c, v_c = project(x_c)
+                out_c = kernel_ops.gear_attend_block(
+                    cfg, view, q_c, k_c, v_c, c * nb, nb, scale,
+                    force_kernel=force, interpret=force, force_oracle=oracle)
+                return None, out_c
+
+            seg_xs = jax.tree.map(lambda t: t[lo:hi], chunk_xs)
+            _, o = jax.lax.scan(
+                body_attend, None,
+                (jnp.arange(lo, hi, dtype=jnp.int32), seg_xs))
+            out_parts.append(o)
+        outs_s = jnp.concatenate(out_parts, axis=0)
+        Hq = outs_s.shape[2]
+        outs.append(jnp.moveaxis(outs_s, 0, 2).reshape(B, Hq, n_full, Dh))
+    if rem:
+        q_t, k_t, v_t = project(tail_x)
+        view = chunk_prefix_view(cfg, cache, max(C_new, 1))
+        out_t = kernel_ops.gear_attend_block(
+            cfg, view, q_t, k_t, v_t, n_full, rem, scale,
+            force_kernel=force, interpret=force, force_oracle=oracle)
+        z4 = (0, 0, 0, 0)
+        cache = dataclasses.replace(
+            cache,
+            buf_k=jax.lax.dynamic_update_slice(
+                cache.buf_k, k_t.astype(cache.buf_k.dtype), z4),
+            buf_v=jax.lax.dynamic_update_slice(
+                cache.buf_v, v_t.astype(cache.buf_v.dtype), z4))
+        outs.append(out_t)
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    cache = dataclasses.replace(cache, length=jnp.full((B,), n, jnp.int32))
+    return cache, out
+
+
+def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
+                                  k: jnp.ndarray, v: jnp.ndarray,
+                                  scale: float, key: jax.Array | None = None,
+                                  fused: str = "auto"):
+    """Streaming chunked prefill over precomputed q/k/v (reference entry).
+
+    q: [B, Hq, n, Dh]; k, v: [B, H, n, Dh] — sliced per chunk into
+    :func:`streaming_prefill_pipeline` (the model layer instead projects
+    per chunk inside the scans; see
+    :func:`repro.models.attention.attention_prefill_streaming`).
+
+    Chunk compression is bit-identical to :func:`prefill_layer_cache`'s
+    batched event (batch-invariant keys + per-chunk-independent math), so
+    the resulting cache is bit-identical to a monolithic prefill of the
+    same tokens; only the attention output differs (history is attended in
+    compressed form — the same semantics decode already has).
+
+    Returns (cache, attn_out [B, Hq, n, Dh] in q's dtype).
+    ``fused``: "auto"/"off" (kernels on TPU, jnp oracles elsewhere) or
+    "interpret" (force the Pallas kernels in interpret mode).
+    """
+    pol_nb = cfg.chunk
+    B, Hq, n, Dh = q.shape
+    H = cfg.kv_heads
+    C_new = n // pol_nb
+    n_full = C_new * pol_nb
+
+    def stack(x, heads):
+        return jnp.moveaxis(
+            x[:, :, :n_full].reshape(B, heads, C_new, pol_nb, Dh), 2, 0)
+
+    chunk_xs = (stack(q, Hq), stack(k, H), stack(v, H)) if C_new else None
+    tail_x = ((q[:, :, n_full:], k[:, :, n_full:], v[:, :, n_full:])
+              if n > n_full else None)
+    return streaming_prefill_pipeline(cfg, cache, n, chunk_xs, tail_x,
+                                      lambda x: x, scale, key, fused)
 
 
 def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,
@@ -678,14 +966,32 @@ def splice_slot(full, one, slot, axis: int = 0):
         full, one)
 
 
+@functools.lru_cache(maxsize=64)
+def _fresh_batch1_cached(cfg1: CacheConfig, dtype_name: str):
+    return init_layer_cache(cfg1, jnp.dtype(dtype_name))
+
+
+def fresh_batch1_cache(cfg: CacheConfig, dtype=jnp.bfloat16):
+    """Memoized empty batch-1 cache for ``cfg``'s geometry.
+
+    ``CacheConfig`` is hashable (frozen dataclasses all the way down), so
+    the zero tree is built once per geometry instead of on every splice —
+    :func:`reset_slot` / :func:`prefill_into_slot` sit on the continuous-
+    batching per-request path and used to reallocate it each call.  The
+    returned tree is shared: callers must treat it as read-only (splices
+    copy out of it; never donate it into a jitted program).
+    """
+    cfg1 = cfg if cfg.batch == 1 else dataclasses.replace(cfg, batch=1)
+    return _fresh_batch1_cached(cfg1, jnp.dtype(dtype).name)
+
+
 def reset_slot(cfg: CacheConfig, cache, slot, dtype=jnp.bfloat16):
     """Return ``cache`` with batch row ``slot`` back in the empty state.
 
     Length goes to 0 (and window ``pos`` to -1), so every attend mask treats
     the slot as empty; stale K/V bytes are also zeroed for hygiene.
     """
-    one = init_layer_cache(dataclasses.replace(cfg, batch=1), dtype)
-    return splice_slot(cache, one, slot)
+    return splice_slot(cache, fresh_batch1_cache(cfg, dtype), slot)
 
 
 def prefill_into_slot(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
@@ -695,7 +1001,9 @@ def prefill_into_slot(cfg: CacheConfig, cache, k: jnp.ndarray, v: jnp.ndarray,
     The single-request cache is built exactly as a batch-1 prefill would
     build it (same chunking, same compression keys), then spliced over the
     slot — the cache-level half of the slot-splice protocol (DESIGN.md).
+    The empty batch-1 scaffold comes from the :func:`fresh_batch1_cache`
+    memo, so the per-request path allocates only the filled tree.
     """
     cfg1 = dataclasses.replace(cfg, batch=1)
-    one = prefill_layer_cache(cfg1, init_layer_cache(cfg1, dtype), k, v, key)
+    one = prefill_layer_cache(cfg1, fresh_batch1_cache(cfg1, dtype), k, v, key)
     return splice_slot(cache, one, slot)

@@ -22,7 +22,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SparseOutliers", "outlier_count", "filter_outliers", "densify"]
+__all__ = ["SparseOutliers", "outlier_count", "filter_outliers",
+           "filter_outliers_k", "densify", "iterative_topk"]
 
 
 @functools.partial(
@@ -73,12 +74,47 @@ def _scatter_last(shape, idx: jnp.ndarray, vals: jnp.ndarray, dtype) -> jnp.ndar
     return out.reshape(shape)
 
 
+def iterative_topk(x: jnp.ndarray, k: int, axis: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-``k`` of ``x`` along ``axis`` via ``k`` masked max sweeps.
+
+    Returns (values, indices) with the reduced axis removed and ``k``
+    appended last, in :func:`jax.lax.top_k` order (values descending, ties
+    broken by lower index).  Built from vectorized max / compare-iota ops
+    only, so the same routine runs inside Pallas TPU kernels (no gather or
+    sort hardware needed) — the kernel-side twin of the ``lax.top_k`` call
+    in :func:`filter_outliers_k`.
+    """
+    axis = axis % x.ndim
+    work = x.astype(jnp.float32)
+    n = x.shape[axis]
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis)
+    vals, idxs = [], []
+    for _ in range(k):
+        v = jnp.max(work, axis=axis)
+        ve = jnp.expand_dims(v, axis)
+        i = jnp.min(jnp.where(work == ve, iota, n), axis=axis)
+        vals.append(v)
+        idxs.append(i)
+        work = jnp.where(iota == jnp.expand_dims(i, axis), -3.4e38, work)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
 def filter_outliers(x: jnp.ndarray, s: float, axis: str) -> tuple[SparseOutliers, jnp.ndarray]:
     """Split ``x`` [..., n, d] into (outliers S, remainder x - S).
 
     Returns the sparse set and the tensor with outlier positions zeroed,
-    matching the paper's ``Quant(X - S)`` usage.
+    matching the paper's ``Quant(X - S)`` usage.  The fraction ``s`` maps to
+    the fixed per-extreme count of :func:`outlier_count`;
+    :func:`filter_outliers_k` is the count-level entry point shared with the
+    fused compression kernel's oracle.
     """
+    n, d = x.shape[-2], x.shape[-1]
+    vec_len = n if axis == "token" else d
+    return filter_outliers_k(x, outlier_count(vec_len, s), axis)
+
+
+def filter_outliers_k(x: jnp.ndarray, k: int, axis: str) -> tuple[SparseOutliers, jnp.ndarray]:
+    """:func:`filter_outliers` with the per-extreme count ``k`` given directly."""
     n, d = x.shape[-2], x.shape[-1]
     if axis == "token":
         xt = jnp.swapaxes(x, -1, -2)  # [..., d, n]
@@ -88,7 +124,6 @@ def filter_outliers(x: jnp.ndarray, s: float, axis: str) -> tuple[SparseOutliers
         vec_len = d
     else:
         raise ValueError(f"axis must be 'token' or 'channel', got {axis!r}")
-    k = outlier_count(vec_len, s)
     if 2 * k > vec_len:
         raise ValueError(f"2k={2 * k} exceeds vector length {vec_len}")
     top_v, top_i = jax.lax.top_k(xt, k)

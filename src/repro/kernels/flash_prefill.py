@@ -1,10 +1,18 @@
-"""Pallas TPU kernel: blocked causal/windowed/prefix flash attention (prefill).
+"""Pallas TPU kernels: blocked flash attention for prefill.
 
-Classic FlashAttention-2 schedule on the TPU memory hierarchy: grid
-(BH, q_blocks, kv_blocks) with the KV dimension innermost; running max /
-sum-exp / accumulator live in VMEM scratch, one [Bq, Dh] tile is written to
-HBM per q block.  Supports the mask family the assigned archs need: causal,
-sliding window (gemma3 locals), and bidirectional prefix (paligemma).
+``flash_prefill`` is the classic FlashAttention-2 schedule on the TPU memory
+hierarchy: grid (BH, q_blocks, kv_blocks) with the KV dimension innermost;
+running max / sum-exp / accumulator live in VMEM scratch, one [Bq, Dh] tile
+is written to HBM per q block.  Supports the mask family the assigned archs
+need: causal, sliding window (gemma3 locals), and bidirectional prefix
+(paligemma).
+
+``flash_prefill_block`` is the history-aware variant used by streaming
+chunked prefill: one causal query-block × in-flight-KV-block tile per grid
+step, returning the *unnormalized* (acc, m, l) online-softmax triple so the
+caller can merge it with the compressed-history triple from
+:func:`repro.kernels.gear_decode.gear_decode` (two-piece online softmax —
+the streaming pipeline's step (a), see DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -16,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_prefill"]
+__all__ = ["flash_prefill", "flash_prefill_block"]
 
 NEG_INF = -1e30
 
@@ -66,13 +74,22 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bq", "bk", "window", "prefix_len", "softcap", "interpret"),
+    static_argnames=("bq", "bk", "window", "prefix_len", "softcap",
+                     "kv_repeat", "interpret"),
 )
 def flash_prefill(q, k, v, *, bq: int = 128, bk: int = 128, window: int = 0,
                   prefix_len: int = 0, softcap: float = 0.0,
-                  interpret: bool = False):
-    """q,k,v: [BH, S, Dh] -> [BH, S, Dh] causal attention."""
+                  kv_repeat: int = 1, interpret: bool = False):
+    """q: [BHq, S, Dh]; k,v: [BHq/kv_repeat, S, Dh] -> [BHq, S, Dh].
+
+    Causal attention.  ``kv_repeat`` maps each group of ``kv_repeat``
+    consecutive query rows onto one shared K/V row via the BlockSpec index
+    map (GQA: rows laid out (B, Hkv, G) query-head-major) — no broadcast
+    copy of K/V ever lands in HBM.
+    """
     BH, S, Dh = q.shape
+    assert BH % kv_repeat == 0 and k.shape[0] == BH // kv_repeat, \
+        (BH, kv_repeat, k.shape)
     bq = min(bq, S)
     bk = min(bk, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
@@ -80,13 +97,14 @@ def flash_prefill(q, k, v, *, bq: int = 128, bk: int = 128, window: int = 0,
     kernel = functools.partial(
         _kernel, bq=bq, bk=bk, nk=nk, scale=Dh**-0.5, window=window,
         prefix_len=prefix_len, softcap=softcap)
+    kv_spec = pl.BlockSpec((1, bk, Dh), lambda x, i, j: (x // kv_repeat, j, 0))
     return pl.pallas_call(
         kernel,
         grid=(BH, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, Dh), lambda x, i, j: (x, i, 0)),
-            pl.BlockSpec((1, bk, Dh), lambda x, i, j: (x, j, 0)),
-            pl.BlockSpec((1, bk, Dh), lambda x, i, j: (x, j, 0)),
+            kv_spec,
+            kv_spec,
         ],
         out_specs=pl.BlockSpec((1, bq, Dh), lambda x, i, j: (x, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
@@ -97,3 +115,66 @@ def flash_prefill(q, k, v, *, bq: int = 128, bk: int = 128, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def _block_kernel(len_ref, q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, softcap: float):
+    q = q_ref[0].astype(jnp.float32)              # [T, Dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    T = q.shape[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    ok = (ki <= qi) & (ki < len_ref[0])
+    s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                       # [T]
+    p = jnp.exp(s - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    acc_ref[0] = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    m_ref[0] = jnp.broadcast_to(m[:, None], m_ref[0].shape)
+    l_ref[0] = jnp.broadcast_to(l[:, None], l_ref[0].shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def flash_prefill_block(q, k, v, kv_len, *, scale: float, softcap: float = 0.0,
+                        interpret: bool = False):
+    """Causal attention of one in-flight block against itself, unnormalized.
+
+    q, k, v: [N, T, Dh]; kv_len: [N] int32 — query row t of program n sees
+    keys j with ``j <= t`` and ``j < kv_len[n]`` (partial tail chunks mask
+    their padding).  Returns (acc [N, T, Dh] f32, m [N, T, 128], l
+    [N, T, 128]) in the same unnormalized convention as ``gear_decode`` so
+    the two triples merge with one softmax rescale.  Oracle:
+    :func:`repro.kernels.ref.flash_block_ref`.
+    """
+    N, T, Dh = q.shape
+    f32 = jnp.float32
+    kernel = functools.partial(_block_kernel, scale=scale, softcap=softcap)
+    n = lambda i: (i, 0, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, T, Dh), n),
+            pl.BlockSpec((1, T, Dh), n),
+            pl.BlockSpec((1, T, Dh), n),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, T, Dh), n),
+            pl.BlockSpec((1, T, 128), n),
+            pl.BlockSpec((1, T, 128), n),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((N, T, Dh), f32),
+            jax.ShapeDtypeStruct((N, T, 128), f32),
+            jax.ShapeDtypeStruct((N, T, 128), f32),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32), q, k, v)

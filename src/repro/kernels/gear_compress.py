@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: fused GEAR chunk compression.
+
+One compression event per grid step, entirely VMEM-resident — the
+device-side analogue of the paper's fused CUDA compression path that
+KVComp/PackKV show is where the peak-memory/throughput win comes from.
+Consumed by streaming chunked prefill
+(:func:`repro.core.cache.streaming_prefill_pipeline` via the ``fused``
+knob); decode's buffer-close event still runs the plain XLA
+``compress_matrix`` path (wiring it through ``append_token`` is future
+work).  Per chunk tile ``[n_b, Dh]`` the kernel:
+
+  1. extracts the top/bottom ``k`` magnitude outliers per vector with
+     :func:`repro.core.outlier.iterative_topk` (masked max sweeps — pure
+     vector ops, :func:`jax.lax.top_k` ordering) and densifies them with
+     sequential compare-iota selects (set semantics, matching the oracle's
+     scatter),
+  2. quantizes the remainder with the chunk-local uniform asymmetric
+     quantizer (per-channel token groups for K, per-token channel groups for
+     V — both orientations of :mod:`repro.core.quant`),
+  3. packs the codes into int32 lanes with vectorized shift/or
+     (:mod:`repro.core.packing` layout),
+  4. emits the quantization residual ``(x − S) − deq(D̂)`` in f32 for the
+     XLA-side power-iteration low-rank step (stats are rounded through the
+     cache's storage dtype first so the residual matches what
+     :func:`repro.core.gear.compress_matrix` would hand the SVD solver).
+
+Int codes, min/max stats, and the outlier scratch never touch HBM; the HBM
+traffic of one compression event is exactly its compressed output plus one
+chunk of input/residual.
+
+Layout contract (shared with :func:`repro.kernels.ref.gear_compress_ref`):
+
+  x [N, n_b, Dh]  ->  packed   int32 [N, n_b, Dh // (32/bits)]
+                      scale/zero f32 [N, n_b/g, Dh]   (per_channel, g tokens)
+                                     [N, n_b, Dh/g]   (per_token*, g channels)
+                      sp_val/idx     [N, Dh, 2k]      (per_channel: token idx)
+                                     [N, n_b, 2k]     (per_token*: channel idx)
+                      resid      f32 [N, n_b, Dh]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.outlier import iterative_topk
+
+__all__ = ["gear_compress"]
+
+
+def _kernel(x_ref, *refs, bits: int, group: int, per_channel: bool,
+            n_out: int, stat_dtype: str):
+    if n_out:
+        packed_ref, scale_ref, zero_ref, spv_ref, spi_ref, resid_ref = refs
+    else:
+        packed_ref, scale_ref, zero_ref, resid_ref = refs
+    x = x_ref[0].astype(jnp.float32)                     # [nb, d]
+    nb, d = x.shape
+    per = 32 // bits
+
+    # ---- outliers: top/bottom k per vector, densified via select chain ----
+    r = x
+    if n_out:
+        axis = 0 if per_channel else 1
+        top_v, top_i = iterative_topk(x, n_out, axis=axis)
+        bot_v, bot_i = iterative_topk(-x, n_out, axis=axis)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (nb, d), axis)
+        dense = jnp.zeros((nb, d), jnp.float32)
+        # sequential selects = the oracle's scatter-set (top first, then
+        # bottom; a position in both sets carries the same value either way)
+        for j in range(n_out):
+            dense = jnp.where(iota == jnp.expand_dims(top_i[:, j], axis),
+                              jnp.expand_dims(top_v[:, j], axis), dense)
+        for j in range(n_out):
+            dense = jnp.where(iota == jnp.expand_dims(bot_i[:, j], axis),
+                              jnp.expand_dims(-bot_v[:, j], axis), dense)
+        r = x - dense
+        spv_ref[0] = jnp.concatenate([top_v, -bot_v], axis=-1)
+        spi_ref[0] = jnp.concatenate([top_i, bot_i], axis=-1)
+
+    # ---- quantize the remainder (chunk-local groups) ----------------------
+    if per_channel:                                      # groups of g tokens
+        rg = r.reshape(nb // group, group, d)
+        mn = jnp.min(rg, axis=1)                         # [nb/g, d]
+        mx = jnp.max(rg, axis=1)
+        scale = jnp.maximum((mx - mn) / (2**bits - 1), 1e-8)
+        codes = jnp.clip(jnp.round((rg - mn[:, None, :]) / scale[:, None, :]),
+                         0, 2**bits - 1).reshape(nb, d)
+    else:                                                # groups of g channels
+        rg = r.reshape(nb, d // group, group)
+        mn = jnp.min(rg, axis=2)                         # [nb, d/g]
+        mx = jnp.max(rg, axis=2)
+        scale = jnp.maximum((mx - mn) / (2**bits - 1), 1e-8)
+        codes = jnp.clip(jnp.round((rg - mn[:, :, None]) / scale[:, :, None]),
+                         0, 2**bits - 1).reshape(nb, d)
+
+    # ---- pack into int32 lanes -------------------------------------------
+    lanes = codes.astype(jnp.uint32).reshape(nb, d // per, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
+    packed_ref[0] = jnp.sum(lanes << shifts, axis=-1,
+                            dtype=jnp.uint32).astype(jnp.int32)
+    scale_ref[0] = scale
+    zero_ref[0] = mn
+
+    # ---- residual for the low-rank step ----------------------------------
+    # deq uses the stats as the cache will store them (bf16 by default), so
+    # the residual — hence the power-iteration factors — matches the oracle.
+    sd = jnp.dtype(stat_dtype)
+    s_r = scale.astype(sd).astype(jnp.float32)
+    z_r = mn.astype(sd).astype(jnp.float32)
+    if per_channel:
+        deq = (codes.reshape(nb // group, group, d) * s_r[:, None, :]
+               + z_r[:, None, :]).reshape(nb, d)
+    else:
+        deq = (codes.reshape(nb, d // group, group) * s_r[:, :, None]
+               + z_r[:, :, None]).reshape(nb, d)
+    resid_ref[0] = r - deq
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "scheme", "group", "n_out", "stat_dtype",
+                     "interpret"),
+)
+def gear_compress(x: jnp.ndarray, *, bits: int, scheme: str,
+                  group: int | None = None, n_out: int = 0,
+                  stat_dtype: str = "bfloat16", interpret: bool = False):
+    """Fused quantize+pack+stats+outlier compression of a chunk batch.
+
+    x: [N, nb, d].  ``scheme`` is a :mod:`repro.core.quant` scheme name
+    (``per_channel`` = K orientation, ``per_token``/``per_token_group`` = V
+    orientation); ``group=None`` selects the coarse per-vector grouping.
+    ``n_out`` is the per-extreme outlier count (0 disables the sparse path).
+    Returns (packed, scale, zero, sp_val, sp_idx, resid) — sp_* are None
+    when ``n_out == 0``.  See :func:`repro.kernels.ref.gear_compress_ref`
+    for the oracle defining the exact contract.
+    """
+    N, nb, d = x.shape
+    per = 32 // bits
+    per_channel = scheme == "per_channel"
+    if group is None:
+        group = nb if per_channel else d
+    rows, cols = (nb // group, d) if per_channel else (nb, d // group)
+    f32 = jnp.float32
+    out_shape = [
+        jax.ShapeDtypeStruct((N, nb, d // per), jnp.int32),
+        jax.ShapeDtypeStruct((N, rows, cols), f32),
+        jax.ShapeDtypeStruct((N, rows, cols), f32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, nb, d // per), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, rows, cols), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, rows, cols), lambda i: (i, 0, 0)),
+    ]
+    if n_out:
+        sp_rows = d if per_channel else nb
+        out_shape += [
+            jax.ShapeDtypeStruct((N, sp_rows, 2 * n_out), f32),
+            jax.ShapeDtypeStruct((N, sp_rows, 2 * n_out), jnp.int32),
+        ]
+        out_specs += [
+            pl.BlockSpec((1, sp_rows, 2 * n_out), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sp_rows, 2 * n_out), lambda i: (i, 0, 0)),
+        ]
+    out_shape.append(jax.ShapeDtypeStruct((N, nb, d), f32))
+    out_specs.append(pl.BlockSpec((1, nb, d), lambda i: (i, 0, 0)))
+
+    kernel = functools.partial(
+        _kernel, bits=bits, group=group, per_channel=per_channel,
+        n_out=n_out, stat_dtype=stat_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, nb, d), lambda i: (i, 0, 0))],
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        interpret=interpret,
+    )(x)
+    if n_out:
+        return out
+    packed, scale, zero, resid = out
+    return packed, scale, zero, None, None, resid

@@ -14,14 +14,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.cache import CacheConfig
+from repro.core.cache import CacheConfig, streaming_supported
 from repro.kernels import ref as ref_ops
-from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_block
+from repro.kernels.gear_compress import gear_compress
 from repro.kernels.gear_decode import gear_decode
 from repro.kernels.quant_pack import quant_pack
 
-__all__ = ["on_tpu", "fused_supported", "gear_attend", "flash_attention",
-           "quantize_chunk"]
+__all__ = ["on_tpu", "fused_supported",
+           "gear_attend", "gear_attend_block", "gear_compress_chunks",
+           "flash_attention", "quantize_chunk"]
 
 NEG_INF = -1e30
 
@@ -41,14 +43,122 @@ def fused_supported(cfg: CacheConfig) -> bool:
     with per-channel K quantization at chunk granularity (group == chunk);
     both recommended policies (GEAR-KCVT-4bit, GEAR-KIVI-2bit) qualify, the
     FlexGen-style per-token-group backbone (K in the V layout) does not.
-    The check is static — safe to branch on at trace time.
+    The check is static — safe to branch on at trace time.  Streaming
+    prefill's history scorer shares the layout, so this is the same
+    predicate as :func:`repro.core.cache.streaming_supported`.
     """
-    if cfg.kind != "gear" or cfg.policy.is_fp16:
-        return False
-    scheme, group = cfg.k_scheme()
-    if scheme != "per_channel":
-        return False
-    return (cfg.chunk if group is None else group) == cfg.chunk
+    return streaming_supported(cfg)
+
+
+def gear_compress_chunks(x: jnp.ndarray, *, bits: int, scheme: str,
+                         group: int | None, n_out: int,
+                         stat_dtype: str = "bfloat16",
+                         force_kernel: bool = False, interpret: bool = False):
+    """Fused chunk compression: Pallas kernel on TPU (or forced interpret),
+    bit-exact jnp oracle elsewhere.  x: [N, nb, d] — see
+    :func:`repro.kernels.ref.gear_compress_ref` for the contract."""
+    if on_tpu() or force_kernel:
+        return gear_compress(x, bits=bits, scheme=scheme, group=group,
+                             n_out=n_out, stat_dtype=stat_dtype,
+                             interpret=interpret or not on_tpu())
+    return ref_ops.gear_compress_ref(x, bits=bits, scheme=scheme, group=group,
+                                     n_out=n_out, stat_dtype=stat_dtype)
+
+
+def _gear_operands(cfg: CacheConfig, cache, BH: int):
+    """Flatten a GEAR layer cache into the [BH]-leading operand groups the
+    ``gear_decode`` kernel/oracle contract takes — shared by the decode
+    step (:func:`gear_attend`) and the streaming prefill block
+    (:func:`gear_attend_block`), so a new cache leaf is threaded once."""
+    pol = cfg.policy
+    lr = dict(
+        k_a=_flat(cache.k_a, BH), k_b=_flat(cache.k_b, BH),
+        v_a=_flat(cache.v_a, BH), v_b=_flat(cache.v_b, BH),
+    ) if pol.use_lowrank else {}
+    sp = dict(
+        k_sp_val=_flat(cache.k_sp_val, BH), k_sp_idx=_flat(cache.k_sp_idx, BH),
+        v_sp_val=_flat(cache.v_sp_val, BH), v_sp_idx=_flat(cache.v_sp_idx, BH),
+    ) if pol.use_sparse else {}
+    arrays = (_flat(cache.k_packed, BH), _flat(cache.k_scale, BH),
+              _flat(cache.k_zero, BH), _flat(cache.v_packed, BH),
+              _flat(cache.v_scale, BH), _flat(cache.v_zero, BH))
+    return arrays, lr, sp
+
+
+def gear_attend_block(cfg: CacheConfig, cache, q: jnp.ndarray,
+                      k_blk: jnp.ndarray, v_blk: jnp.ndarray,
+                      n_comp, blk_len, scale: float,
+                      force_kernel: bool = False,
+                      interpret: bool = False,
+                      force_oracle: bool = False) -> jnp.ndarray:
+    """Streaming-prefill attention of one query block: compressed history
+    + in-flight FP16 block, merged with a two-piece online softmax.
+
+    q: [B, Hq, T, Dh] (the current chunk's queries); k_blk/v_blk:
+    [B, H, T, Dh] (the same chunk's uncompressed K/V); ``n_comp`` — scalar
+    compressed extent (tokens in chunks already closed, i.e. ``c · n_b``);
+    ``blk_len`` — valid tokens in the block (< T only for the tail).
+    History scores run the ``gear_decode`` machinery (kernel on TPU, oracle
+    elsewhere; ``force_oracle`` pins the jnp oracles even on TPU — the
+    ``fused="off"`` escape hatch) with the chunk's T·G query rows sharing
+    one extent mask; the block piece is ``flash_prefill_block`` with causal
+    masking.  Returns [B, Hq, T, Dh] in q's dtype.
+    """
+    pol = cfg.policy
+    B, Hq, T, Dh = q.shape
+    H = cfg.kv_heads
+    G = Hq // H
+    BH = B * H
+    nb = cfg.chunk
+    f32 = jnp.float32
+    qf = q.astype(f32).reshape(B, H, G, T, Dh)
+    use_kernel = (on_tpu() or force_kernel) and not force_oracle
+    run_interp = interpret or not on_tpu()
+
+    # --- compressed history: unnormalized (acc, m, l) over T·G query rows --
+    kwargs = dict(bits=pol.bits, chunk=nb, scale_factor=scale)
+    arrays, lr, sp = _gear_operands(cfg, cache, BH)
+    n_comp_bh = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (BH,))
+    q_rows = qf.reshape(BH, G * T, Dh)
+    common = (q_rows, *arrays, n_comp_bh)
+    if use_kernel:
+        acc_h, m_h, l_h = gear_decode(*common, interpret=run_interp,
+                                      **kwargs, **lr, **sp)
+        m_h, l_h = m_h[..., 0], l_h[..., 0]
+    else:
+        acc_h, m_h, l_h = ref_ops.gear_hist_block_ref(*common, **kwargs,
+                                                      **lr, **sp)
+    acc_h = acc_h.reshape(B, H, G, T, Dh)
+    m_h = m_h.reshape(B, H, G, T)
+    l_h = l_h.reshape(B, H, G, T)
+
+    # --- in-flight FP16 block: causal within the chunk ---------------------
+    N2 = BH * G
+    q_blk = qf.reshape(N2, T, Dh)
+    k3 = jnp.broadcast_to(k_blk.astype(f32)[:, :, None], (B, H, G, T, Dh))
+    v3 = jnp.broadcast_to(v_blk.astype(f32)[:, :, None], (B, H, G, T, Dh))
+    kv_len = jnp.broadcast_to(jnp.asarray(blk_len, jnp.int32), (N2,))
+    if use_kernel:
+        acc_b, m_b, l_b = flash_prefill_block(
+            q_blk, k3.reshape(N2, T, Dh), v3.reshape(N2, T, Dh), kv_len,
+            scale=scale, interpret=run_interp)
+        m_b, l_b = m_b[..., 0], l_b[..., 0]
+    else:
+        acc_b, m_b, l_b = ref_ops.flash_block_ref(
+            q_blk, k3.reshape(N2, T, Dh), v3.reshape(N2, T, Dh), kv_len,
+            scale=scale)
+    acc_b = acc_b.reshape(B, H, G, T, Dh)
+    m_b = m_b.reshape(B, H, G, T)
+    l_b = l_b.reshape(B, H, G, T)
+
+    # --- two-piece merge + normalize ---------------------------------------
+    m_tot = jnp.maximum(m_h, m_b)
+    c_h = jnp.exp(m_h - m_tot)
+    c_b = jnp.exp(m_b - m_tot)
+    l_tot = l_h * c_h + l_b * c_b
+    out = (acc_h * c_h[..., None] + acc_b * c_b[..., None]) / jnp.maximum(
+        l_tot[..., None], 1e-30)
+    return out.reshape(B, Hq, T, Dh).astype(q.dtype)
 
 
 def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
@@ -78,17 +188,8 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     n_buf = len_bh - n_comp                   # [BH] streaming-buffer fill
 
     kwargs = dict(bits=pol.bits, chunk=nb, scale_factor=scale)
-    lr = dict(
-        k_a=_flat(cache.k_a, BH), k_b=_flat(cache.k_b, BH),
-        v_a=_flat(cache.v_a, BH), v_b=_flat(cache.v_b, BH),
-    ) if pol.use_lowrank else {}
-    sp = dict(
-        k_sp_val=_flat(cache.k_sp_val, BH), k_sp_idx=_flat(cache.k_sp_idx, BH),
-        v_sp_val=_flat(cache.v_sp_val, BH), v_sp_idx=_flat(cache.v_sp_idx, BH),
-    ) if pol.use_sparse else {}
-    common = (qf, _flat(cache.k_packed, BH), _flat(cache.k_scale, BH),
-              _flat(cache.k_zero, BH), _flat(cache.v_packed, BH),
-              _flat(cache.v_scale, BH), _flat(cache.v_zero, BH), n_comp)
+    arrays, lr, sp = _gear_operands(cfg, cache, BH)
+    common = (qf, *arrays, n_comp)
     if on_tpu() or force_kernel:
         acc, m, l = gear_decode(*common, interpret=interpret or not on_tpu(),
                                 **kwargs, **lr, **sp)
@@ -112,16 +213,35 @@ def gear_attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     return out.reshape(B, Hq, Dh).astype(q.dtype)
 
 
+def _block_divisor(s: int, target: int) -> int:
+    """Largest block size <= target dividing s (flash kernel tiling)."""
+    c = min(target, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
 def flash_attention(q, k, v, *, window: int = 0, prefix_len: int = 0,
-                    softcap: float = 0.0, interpret: bool = False):
-    """q,k,v: [BH, S, Dh] causal attention; kernel on TPU, oracle elsewhere."""
-    if on_tpu():
-        return flash_prefill(q, k, v, window=window, prefix_len=prefix_len,
-                             softcap=softcap, interpret=False)
-    if interpret:
-        return flash_prefill(q, k, v, window=window, prefix_len=prefix_len,
-                             softcap=softcap, interpret=True)
+                    softcap: float = 0.0, kv_repeat: int = 1,
+                    interpret: bool = False, bq: int = 128, bk: int = 128):
+    """q: [BHq, S, Dh], k/v: [BHq/kv_repeat, S, Dh] causal attention;
+    kernel on TPU, oracle elsewhere.
+
+    ``kv_repeat`` > 1 is GQA: the kernel indexes each query head group onto
+    its shared K/V row (no broadcast copy).  Block sizes are snapped down
+    to divisors of S, so any (padded prompt) length the engine produces is
+    legal.
+    """
     S = q.shape[1]
+    if on_tpu() or interpret:
+        return flash_prefill(q, k, v, bq=_block_divisor(S, bq),
+                             bk=_block_divisor(S, bk), window=window,
+                             prefix_len=prefix_len, softcap=softcap,
+                             kv_repeat=kv_repeat,
+                             interpret=interpret and not on_tpu())
+    if kv_repeat > 1:            # CPU oracle path: plain repeat is fine
+        k = jnp.repeat(k, kv_repeat, axis=0)
+        v = jnp.repeat(v, kv_repeat, axis=0)
     return ref_ops.flash_prefill_ref(q, k, v, jnp.arange(S), causal=True,
                                      window=window, prefix_len=prefix_len,
                                      softcap=softcap)

@@ -6,12 +6,17 @@ portable fallback used on CPU/GPU backends.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import outlier as ol
 from repro.core import packing
+from repro.core import quant as q_lib
 
-__all__ = ["quant_pack_ref", "gear_decode_ref", "flash_prefill_ref"]
+__all__ = ["quant_pack_ref", "gear_decode_ref", "gear_hist_block_ref",
+           "flash_prefill_ref", "gear_compress_ref", "flash_block_ref"]
 
 NEG_INF = -1e30
 
@@ -123,3 +128,121 @@ def flash_prefill_ref(q, k, v, positions, *, causal: bool = True,
     s = jnp.where(ok[None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("xqk,xkd->xqd", w, v.astype(f32)).astype(q.dtype)
+
+
+def gear_compress_ref(x: jnp.ndarray, *, bits: int, scheme: str,
+                      group: int | None = None, n_out: int = 0,
+                      stat_dtype: str = "bfloat16"):
+    """Oracle for :func:`repro.kernels.gear_compress.gear_compress`.
+
+    Built directly on :mod:`repro.core.quant` / :mod:`repro.core.outlier`,
+    so its outputs are bit-identical to the corresponding pieces of
+    :func:`repro.core.gear.compress_matrix` — this is both the kernel's
+    ground truth and the portable CPU/GPU fallback of the fused compression
+    path.  x: [N, nb, d] -> (packed, scale, zero, sp_val, sp_idx, resid);
+    sp_* are None when ``n_out == 0``; scale/zero are the *unrounded* f32
+    compact stats while ``resid`` is computed against stats rounded through
+    ``stat_dtype`` (what the cache stores — what the SVD solver must see).
+    """
+    per_channel = scheme == "per_channel"
+    sp_val = sp_idx = None
+    remainder = x
+    dense = 0.0
+    if n_out:
+        sp, remainder = ol.filter_outliers_k(x, n_out, "token" if per_channel
+                                             else "channel")
+        sp_val, sp_idx = sp.values.astype(jnp.float32), sp.indices
+        dense = ol.densify(sp)
+    qt = q_lib.quantize(remainder, bits, scheme, group,
+                        stat_dtype=jnp.float32)
+    sd = jnp.dtype(stat_dtype)
+    qt_r = dataclasses.replace(qt, scale=qt.scale.astype(sd),
+                               zero=qt.zero.astype(sd))
+    resid = x.astype(jnp.float32) - q_lib.dequantize(qt_r) - dense
+    return qt.packed, qt.scale, qt.zero, sp_val, sp_idx, resid
+
+
+def flash_block_ref(q, k, v, kv_len, *, scale: float, softcap: float = 0.0):
+    """Oracle for :func:`repro.kernels.flash_prefill.flash_prefill_block`.
+
+    q,k,v: [N, T, Dh]; kv_len [N].  Returns unnormalized (acc [N, T, Dh],
+    m [N, T], l [N, T]) — the caller merges with a history triple.
+    """
+    f32 = jnp.float32
+    N, T, _ = q.shape
+    s = jnp.einsum("ntd,nsd->nts", q.astype(f32), k.astype(f32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(T)[None, :]
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (N,))
+    ok = (ki <= qi)[None] & (ki[None] < kv_len[:, None, None])
+    s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("nts,nsd->ntd", p, v.astype(f32))
+    return acc, m, l
+
+
+def gear_hist_block_ref(
+    q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, n_comp, *,
+    bits: int, chunk: int, scale_factor: float,
+    k_a=None, k_b=None, v_a=None, v_b=None,
+    k_sp_val=None, k_sp_idx=None, v_sp_val=None, v_sp_idx=None,
+):
+    """Block-query twin of :func:`gear_decode_ref` tuned for the streaming-
+    prefill oracle path: same contract and (f32) math, but the low-rank and
+    outlier terms are densified into K̂/V̂ up front — a per-chunk A·Bᵀ GEMM
+    and a vals-only scatter — so they ride the two big score/value GEMMs
+    instead of paying XLA's small-einsum overhead once per scanned chunk.
+    The factored forms stay in ``gear_decode`` where they belong (VMEM
+    residency on TPU).  Returns (acc [BH, G, Dh], m [BH, G], l [BH, G]).
+    """
+    BH, S, L = k_packed.shape
+    Dh = k_scale.shape[-1]
+    C = S // chunk
+    f32 = jnp.float32
+    qf = q.astype(f32)
+
+    sc = jnp.repeat(k_scale.astype(f32), chunk, axis=1)
+    zr = jnp.repeat(k_zero.astype(f32), chunk, axis=1)
+    k_hat = _dequant(k_packed, sc, zr, bits, Dh)                 # [BH, S, Dh]
+    if k_a is not None:
+        a_c = k_a.astype(f32).reshape(BH, C, chunk, -1)
+        k_hat = k_hat + jnp.einsum("xcnr,xcdr->xcnd", a_c,
+                                   k_b.astype(f32)).reshape(BH, S, Dh)
+    if k_sp_val is not None:
+        # densify via a 2k-deep select chain (set semantics, like
+        # outlier.densify) — XLA CPU scatters serialize, selects vectorize
+        iota_n = jnp.arange(chunk)[None, None, None, :]
+        sp = jnp.zeros((BH, C, Dh, chunk), f32)
+        for j in range(k_sp_val.shape[-1]):
+            sp = jnp.where(iota_n == k_sp_idx[..., j:j + 1],
+                           k_sp_val[..., j:j + 1].astype(f32), sp)
+        k_hat = k_hat + jnp.swapaxes(sp, 2, 3).reshape(BH, S, Dh)
+    s = jnp.einsum("xgd,xsd->xgs", qf, k_hat) * scale_factor
+    n_comp = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (BH,))
+    valid = jnp.arange(S)[None, :] < n_comp[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+
+    gv = v_scale.shape[-1]
+    vsc = jnp.repeat(v_scale.astype(f32), Dh // gv, axis=-1)
+    vzr = jnp.repeat(v_zero.astype(f32), Dh // gv, axis=-1)
+    v_hat = _dequant(v_packed, vsc, vzr, bits, Dh)
+    if v_a is not None:
+        a_c = v_a.astype(f32).reshape(BH, C, chunk, -1)
+        v_hat = v_hat + jnp.einsum("xcnr,xcdr->xcnd", a_c,
+                                   v_b.astype(f32)).reshape(BH, S, Dh)
+    if v_sp_val is not None:
+        iota_d = jnp.arange(Dh)[None, None, :]
+        sp_v = jnp.zeros((BH, S, Dh), f32)
+        for j in range(v_sp_val.shape[-1]):
+            sp_v = jnp.where(iota_d == v_sp_idx[..., j:j + 1],
+                             v_sp_val[..., j:j + 1].astype(f32), sp_v)
+        v_hat = v_hat + sp_v
+    acc = jnp.einsum("xgs,xsd->xgd", p, v_hat)
+    return acc, m, l

@@ -17,7 +17,9 @@ from repro.core import cache as cache_lib
 from repro.kernels import ops as kernel_ops
 from repro.models.common import KeyGen, apply_rope, dense_init, rmsnorm
 
-__all__ = ["attn_params", "attention_train", "attention_decode", "rope_theta_for"]
+__all__ = ["attn_params", "attention_train", "attention_decode",
+           "attention_prefill_streaming", "streaming_prefill_supported",
+           "rope_theta_for"]
 
 NEG_INF = -1e30
 
@@ -114,17 +116,111 @@ def _sdpa_chunked(cfg: ModelConfig, q, k, v, positions, kind: str,
     return jnp.moveaxis(out, 0, 1).reshape(B, S, Hq, Dh).astype(q.dtype)
 
 
+def _sdpa_flash(cfg: ModelConfig, q, k, v, kind: str, prefix_len: int,
+                interpret: bool):
+    """Full-sequence attention through the ``flash_prefill`` Pallas kernel.
+
+    q: [B,S,Hq,Dh]; k,v: [B,S,Hkv,Dh] -> [B,S,Hq,Dh].  GQA lays query rows
+    out (B, Hkv, G) head-major and the kernel's ``kv_repeat`` index map
+    points each group at its shared K/V row — no G-fold broadcast copy of
+    K/V is ever materialized.  Same mask family as ``_sdpa_chunked``
+    (causal / sliding window / bidirectional prefix, plus logit softcap).
+    """
+    B, S, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    window = cfg.local_window if kind == "local" else 0
+    qh = jnp.moveaxis(q, 1, 2).reshape(B * Hq, S, Dh)   # (B, Hkv, G) rows
+    out = kernel_ops.flash_attention(
+        qh, jnp.moveaxis(k, 1, 2).reshape(B * Hkv, S, Dh),
+        jnp.moveaxis(v, 1, 2).reshape(B * Hkv, S, Dh),
+        window=window, prefix_len=prefix_len, softcap=cfg.attn_logit_softcap,
+        kv_repeat=G, interpret=interpret)
+    return jnp.moveaxis(out.reshape(B, Hq, S, Dh), 1, 2)
+
+
 def attention_train(cfg: ModelConfig, params, x, positions, kind: str = "global",
-                    prefix_len: int = 0, q_chunk: int = 512):
+                    prefix_len: int = 0, q_chunk: int = 512,
+                    impl: str = "chunked"):
     """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
 
     k/v are returned [B, Hkv, S, Dh] for optional cache construction.
+    ``impl`` selects the score path: "chunked" (lax.scan'd XLA blocks — the
+    training default), "flash" (the ``flash_prefill`` Pallas kernel — the
+    monolithic-prefill fast path on TPU), or "flash-interpret" (kernel in
+    interpret mode, CI parity lane).
     """
     q, k, v = _project_qkv(cfg, params, x, positions, kind)
-    out = _sdpa_chunked(cfg, q, k, v, positions, kind, prefix_len, q_chunk)
+    if impl in ("flash", "flash-interpret"):
+        out = _sdpa_flash(cfg, q, k, v, kind, prefix_len,
+                          interpret=impl == "flash-interpret")
+    else:
+        out = _sdpa_chunked(cfg, q, k, v, positions, kind, prefix_len, q_chunk)
     B, S = x.shape[:2]
-    out = out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype) @ params["wo"].astype(x.dtype)
     return out, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+
+
+def streaming_prefill_supported(cfg: ModelConfig, kind: str,
+                                cache_cfg) -> bool:
+    """Layers that can take the streaming chunked-prefill pipeline.
+
+    Requires the streaming cache layout (GEAR with per-channel K stats at
+    chunk granularity — :func:`repro.core.cache.streaming_supported`; fp16
+    has no compression event, window layers keep their ring buffer) and
+    plain causal attention: the factored history scores have no
+    sliding-window or bidirectional-prefix mask, and — like the
+    cached-decode path — no logit softcap.  Unsupported layers fall back
+    to monolithic prefill under the same knob.  Static (config-only), so
+    the dispatch never splits a jitted program.
+    """
+    return (cache_lib.streaming_supported(cache_cfg) and kind != "local"
+            and cfg.attn_logit_softcap == 0.0
+            and not (cfg.modality == "vlm" and cfg.num_prefix_tokens))
+
+
+def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
+                                kind: str, cache_cfg, key=None,
+                                fused: str = "auto", dtype=jnp.bfloat16):
+    """Streaming chunked prefill of one attention layer: project → compress
+    → attend, one ``n_b``-token chunk at a time under two carry-free
+    ``lax.scan`` passes (loop fission of the compress-as-you-go pipeline —
+    see :func:`repro.core.cache.streaming_prefill_layer_cache`).
+
+    Q/K/V are projected *per chunk inside the scans*, so the full-sequence
+    FP16 K/V never exists: peak memory is the compressed cache plus one
+    chunk of K/V and scores.  The compression scan closes every chunk
+    through the (optionally fused) compression event and its stacked
+    outputs are stored once; the attend scan then runs each chunk's
+    queries against the compressed history *before* that chunk (scores
+    masked at ``c · n_b``) plus the in-flight FP16 chunk via a two-piece
+    online softmax — the same semantics decode already has (compressed
+    history + FP16 buffer).  Leftover tokens land in the streaming buffer.
+    Returns (out [B, S, d_model], layer cache); the cache is bit-identical
+    to a monolithic prefill of the same tokens.
+    """
+    B, S, _ = x.shape
+    nb = cache_cfg.chunk
+    scale = cfg.head_dim ** -0.5
+    cache = cache_lib.init_layer_cache(cache_cfg, dtype)
+    C_new = S // nb
+    n_full = C_new * nb
+
+    def project(x_blk_pos):
+        x_blk, pos_blk = x_blk_pos
+        q, k, v = _project_qkv(cfg, params, x_blk, pos_blk, kind)
+        return (jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                jnp.moveaxis(v, 1, 2))                       # [B, H*, T, Dh]
+
+    chunk_xs = None
+    if C_new:
+        chunk_xs = (jnp.moveaxis(x[:, :n_full].reshape(B, C_new, nb, -1), 1, 0),
+                    positions[:n_full].reshape(C_new, nb))
+    tail_x = (x[:, n_full:], positions[n_full:]) if S > n_full else None
+    cache, out = cache_lib.streaming_prefill_pipeline(
+        cache_cfg, cache, S, chunk_xs, tail_x, project, scale, key, fused)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), cache
 
 
 def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,

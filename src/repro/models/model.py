@@ -52,15 +52,24 @@ class Model:
 
     # -- serving ------------------------------------------------------------
     def prefill(self, params, batch: dict, policy: CompressionPolicy,
-                capacity: int):
+                capacity: int, prefill_mode: str = "monolithic",
+                fused: str = "auto"):
         """Full-prompt forward producing per-layer caches.
 
         Works for any batch size; the serving engine also calls it at
         batch=1 to build a single request's cache for slot splicing
         (:meth:`repro.serving.engine.Engine.prefill_slot`).
+
+        ``prefill_mode``: "monolithic" (full-sequence attention, then one
+        batched compression event per layer) or "streaming" (chunked
+        compress-as-you-go: O(compressed cache + one chunk) peak memory,
+        history attended in compressed form — decode semantics).  Both
+        modes produce bit-identical caches.  ``fused`` picks the prefill
+        kernel path ("auto"/"interpret"/"off"), mirroring decode's knob.
         """
         logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
-                                        policy=policy, capacity=capacity)
+                                        policy=policy, capacity=capacity,
+                                        prefill_mode=prefill_mode, fused=fused)
         return logits, caches
 
     def decode_step(self, params, token_batch: dict, caches, pos,

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import cache as cache_lib
 from repro.core.policy import CompressionPolicy
+from repro.kernels import ops as kernel_ops
 from repro.models import attention as attn_lib
 from repro.models import rwkv as rwkv_lib
 from repro.models import ssm as ssm_lib
@@ -174,7 +175,7 @@ def init_caches(cfg: ModelConfig, policy: CompressionPolicy, batch: int,
 
 
 def _apply_block_train(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
-                       q_chunk, want_kv: bool):
+                       q_chunk, want_kv: bool, attn_impl: str = "chunked"):
     """Returns (x, aux, cache_or_kv)."""
     if kind == "rwkv":
         h, (shift_tm, wkv) = rwkv_lib.time_mix_apply(cfg, bp, apply_norm(x, bp["ln1"], "layernorm"))
@@ -187,7 +188,7 @@ def _apply_block_train(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
 
     xin = apply_norm(x, bp["ln1"], cfg.norm)
     h, (k, v) = attn_lib.attention_train(cfg, bp["attn"], xin, positions, kind,
-                                         prefix_len, q_chunk)
+                                         prefix_len, q_chunk, impl=attn_impl)
     ssm_state = None
     if cfg.ssm and cfg.hybrid_parallel:
         h2, ssm_state = ssm_lib.ssm_apply(cfg, bp["ssm"], xin)
@@ -231,6 +232,47 @@ def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
     return x_t, new_cache
 
 
+def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
+                         q_chunk, policy, batch, capacity, cache_dtype,
+                         fused: str, attn_impl: str):
+    """Prefill block that builds its layer cache directly (streaming mode).
+
+    Layers supporting the streaming pipeline project/attend/compress chunk
+    by chunk (the full-sequence FP16 K/V never exists); window / softcap /
+    prefix-LM / fp16 layers fall back to monolithic attention with the
+    batched compression event, inside the same unit body.  Returns
+    (x, aux, cache)."""
+    if kind == "rwkv":
+        return _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
+                                  q_chunk, want_kv=True)
+    ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
+    if not attn_lib.streaming_prefill_supported(cfg, kind, ccfg):
+        x, aux, kv = _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
+                                        q_chunk, want_kv=True,
+                                        attn_impl=attn_impl)
+        return x, aux, _kv_to_cache(cfg, kind, kv, policy, batch, capacity,
+                                    cache_dtype)
+    xin = apply_norm(x, bp["ln1"], cfg.norm)
+    h, cache = attn_lib.attention_prefill_streaming(
+        cfg, bp["attn"], xin, positions, kind, ccfg, fused=fused,
+        dtype=cache_dtype)
+    ssm_state = None
+    if cfg.ssm and cfg.hybrid_parallel:
+        h2, ssm_state = ssm_lib.ssm_apply(cfg, bp["ssm"], xin)
+        h = (h + h2) * 0.5
+    x = x + h
+    xin2 = apply_norm(x, bp["ln2"], cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        m, aux = moe_apply(cfg, bp["moe"], xin2)
+    else:
+        m = mlp_apply(cfg, bp["mlp"], xin2)
+    x = x + m
+    if ssm_state is not None:
+        return x, aux, (cache, ssm_state)
+    return x, aux, cache
+
+
 def _kv_to_cache(cfg: ModelConfig, kind, kv, policy, batch, capacity, dtype):
     """Convert (k, v) from prefill attention into a filled layer cache."""
     if kind == "rwkv":
@@ -255,11 +297,22 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
             policy: CompressionPolicy | None = None, capacity: int = 0,
             remat: bool = False, remat_policy: str = "full",
             q_chunk_target: int = 512, cache_dtype=jnp.bfloat16,
-            unroll_layers: bool = False):
+            unroll_layers: bool = False, prefill_mode: str = "monolithic",
+            fused: str = "auto"):
     """Full-sequence forward.
 
     mode="train": returns (logits, aux_loss)
     mode="prefill": returns (logits_last [B, 1, vocab...], caches, aux)
+
+    ``prefill_mode`` selects the prefill pipeline: "monolithic" (full-seq
+    attention, then one batched compression event per layer) or "streaming"
+    (chunked compress-as-you-go — the FP16 K/V history is never
+    materialized; unsupported layers fall back per
+    :func:`repro.models.attention.streaming_prefill_supported`).  ``fused``
+    picks the kernel path for prefill ("auto" = Pallas on TPU / oracles
+    elsewhere, "interpret" forces the kernels, "off" = portable XLA) —
+    monolithic prefill routes full-sequence attention through the
+    ``flash_prefill`` kernel under the same knob.
 
     ``unroll_layers`` fully unrolls the layer-stack scan.  Needed inside
     (partially) manual ``shard_map`` regions, where XLA's SPMD partitioner
@@ -272,13 +325,38 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
     prefix_len = cfg.num_prefix_tokens if cfg.modality == "vlm" else 0
     q_chunk = pick_q_chunk(S, q_chunk_target)
     want_kv = mode == "prefill"
+    attn_impl = "chunked"
+    if want_kv and fused == "interpret":
+        attn_impl = "flash-interpret"
+    elif want_kv and fused == "auto" and kernel_ops.on_tpu():
+        attn_impl = "flash"
+
+    if want_kv and prefill_mode == "streaming":
+        def unit_body_stream(carry, unit_params):
+            x, aux = carry
+            caches = []
+            for i, kind in enumerate(cfg.layer_pattern):
+                x, a, c = _apply_block_prefill(
+                    cfg, unit_params[i], x, kind, positions, prefix_len,
+                    q_chunk, policy, B, capacity, cache_dtype, fused, attn_impl)
+                aux = aux + a
+                caches.append(c)
+            return (x, aux), tuple(caches)
+
+        (x, aux), caches = jax.lax.scan(
+            unit_body_stream, (x, jnp.zeros((), jnp.float32)), params["blocks"],
+            unroll=cfg.pattern_repeats if unroll_layers else 1)
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        logits = logits_from_hidden(cfg, params, x[:, -1:, :])
+        return logits, tuple(caches), aux
 
     def unit_body(carry, unit_params):
         x, aux = carry
         kvs = []
         for i, kind in enumerate(cfg.layer_pattern):
             x, a, kv = _apply_block_train(cfg, unit_params[i], x, kind, positions,
-                                          prefix_len, q_chunk, want_kv)
+                                          prefix_len, q_chunk, want_kv,
+                                          attn_impl=attn_impl)
             aux = aux + a
             if want_kv:
                 kvs.append(kv)

@@ -45,11 +45,21 @@ class EngineConfig:
     # layout supports it — kernel on TPU, oracle elsewhere; ragged-aware so
     # continuous batching takes it too), "interpret" (force the Pallas
     # kernel in interpret mode — CI kernel lane), "off" (jnp cache.attend).
+    # The same knob selects the prefill kernel path (flash_prefill for
+    # monolithic attention, gear_compress/gear_attend_block for streaming).
     fused: str = "auto"
+    # Prefill pipeline: "monolithic" (full-sequence attention then one
+    # batched compression event) or "streaming" (compress-as-you-go chunked
+    # pipeline — peak prefill memory is the compressed cache plus one chunk
+    # instead of the full FP16 history; both build bit-identical caches).
+    prefill_mode: str = "monolithic"
 
     def __post_init__(self):
         if self.fused not in ("auto", "interpret", "off"):
             raise ValueError(f"fused must be auto/interpret/off, got {self.fused!r}")
+        if self.prefill_mode not in ("monolithic", "streaming"):
+            raise ValueError(
+                f"prefill_mode must be monolithic/streaming, got {self.prefill_mode!r}")
 
 
 class Engine:
@@ -72,7 +82,9 @@ class Engine:
             self.params = params
 
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, ecfg.policy, cap))
+            lambda p, b: model.prefill(p, b, ecfg.policy, cap,
+                                       prefill_mode=ecfg.prefill_mode,
+                                       fused=ecfg.fused))
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model.decode_step(
                 p, tok, caches, pos, ecfg.policy, cap, fused=ecfg.fused),
@@ -82,12 +94,20 @@ class Engine:
         # batch dim is axis 1 on every leaf (incl. RWKV/SSM states); the
         # cache pspecs keep that axis's sharding uniform across leaves, which
         # is what keeps this DUS-at-a-traced-offset legal under SPMD.
+        # Two variants: the per-request prefill splice also donates the
+        # batch-1 tree (freshly built each request, consumed by the row
+        # write) — but a [R, 1, ...] leaf can only alias into a [R, 1, ...]
+        # output, so the extra donation applies on batch-1 engines only
+        # (wider geometries would just trip XLA's unusable-donation
+        # warning).  reset_slot must NOT donate its batch-1 tree — that is
+        # the reusable `_fresh1` zero cache.
         splice = lambda full, one, slot: cache_lib.splice_slot(full, one, slot, axis=1)
-        if self._cache_shard is not None:
-            self._splice = jax.jit(splice, donate_argnums=(0,),
-                                   out_shardings=self._cache_shard)
-        else:
-            self._splice = jax.jit(splice, donate_argnums=(0,))
+        shard_kw = ({"out_shardings": self._cache_shard}
+                    if self._cache_shard is not None else {})
+        self._splice = jax.jit(splice, donate_argnums=(0,), **shard_kw)
+        self._splice_donate_one = (
+            jax.jit(splice, donate_argnums=(0, 1), **shard_kw)
+            if ecfg.batch == 1 else self._splice)  # identical program otherwise
         self._fresh1 = None  # lazily-built batch-1 empty cache (for reset_slot)
 
     def _cap(self) -> int:
@@ -130,10 +150,16 @@ class Engine:
         Returns (logits [1, 1, ...] for the request's last prompt position,
         new caches).  The batch-1 prefill is bit-identical to a solo run of
         the same prompt, so a spliced request decodes exactly as it would
-        alone (DESIGN.md §splice isolation).  ``caches`` is donated.
+        alone (DESIGN.md §splice isolation).  Both the live ``caches`` tree
+        and the request's batch-1 tree are donated into the splice, so the
+        per-request path is one batch-row write with no tree copies.  With
+        ``prefill_mode="streaming"`` the batch-1 prefill never materializes
+        the prompt's FP16 K/V, so long-prompt splices stay within the
+        compressed-cache memory budget.
         """
         logits, one = self._prefill(self.params, batch1)
-        return logits, self._splice(caches, one, jnp.asarray(slot, jnp.int32))
+        return logits, self._splice_donate_one(caches, one,
+                                               jnp.asarray(slot, jnp.int32))
 
     def reset_slot(self, caches, slot: int):
         """Return ``caches`` with batch row ``slot`` cleared to empty state."""

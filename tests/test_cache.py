@@ -1,4 +1,6 @@
-"""Streaming-buffer cache semantics (paper Algorithm 1) + attend equivalence."""
+"""Streaming-buffer cache semantics (paper Algorithm 1) + attend equivalence
++ the streaming-chunked-prefill parity sweep (compress-as-you-go vs the
+monolithic batched compression event)."""
 
 import dataclasses
 
@@ -7,8 +9,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (CacheConfig, named_policy, init_layer_cache,
-                        prefill_layer_cache, append_token, attend, dense_kv,
-                        reset_slot, prefill_into_slot)
+                        prefill_layer_cache, streaming_prefill_layer_cache,
+                        append_token, attend, dense_kv,
+                        reset_slot, prefill_into_slot, fresh_batch1_cache,
+                        packing)
 from repro.kernels.ops import fused_supported, gear_attend
 
 B, H, DH = 2, 2, 64
@@ -165,3 +169,161 @@ def test_reset_and_prefill_into_slot_match_solo_prefill():
     # slot 0 reconstructs exactly as before the splice
     kh0, _ = dense_kv(cfg, cache)
     assert (kh_b[0] == kh0[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming chunked prefill (compress-as-you-go) parity sweep
+
+
+def _qkv(n, key=3, batch=B):
+    k = jax.random.normal(jax.random.PRNGKey(key), (batch, H, n, DH))
+    v = jax.random.normal(jax.random.PRNGKey(key + 1), (batch, H, n, DH))
+    q = jax.random.normal(jax.random.PRNGKey(key + 2), (batch, H * 2, n, DH))
+    return q, k, v
+
+
+def _tree_equal(a, b) -> bool:
+    return all(bool((x == y).all()) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("pol", ["gear_kcvt4", "gear_kivi2", "kivi2",
+                                 "gear_l_kivi2", "outlier_kivi2"])
+@pytest.mark.parametrize("n", [32, 44, 7])
+def test_streaming_prefill_cache_bit_identical_to_monolithic(pol, n):
+    """The tentpole cache invariant: chunk-boundary (n=32), leftover-buffer
+    (n=44), and buffer-only (n=7) prompts all build the exact monolithic
+    cache — per-chunk compression events are batch- and chunk-count-
+    invariant, so compress-as-you-go changes nothing the decoder can see."""
+    policy = small_policy(pol)
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    q, k, v = _qkv(n)
+    mono = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
+    for fused in ("off", "auto"):
+        stream, out = streaming_prefill_layer_cache(
+            cfg, init_layer_cache(cfg), q, k, v, DH**-0.5, fused=fused)
+        assert _tree_equal(mono, stream), (pol, n, fused)
+        assert out.shape == (B, H * 2, n, DH)
+        assert bool(jnp.isfinite(out).all())
+
+
+def _lattice(key, shape, nb, bits=4, delta=0.5):
+    """K/V on the quantization lattice: every chunk-column group and token
+    row contains 0 and the top level, so 4-bit quantization is lossless,
+    and the zero residual makes the low-rank factors exactly zero."""
+    top = (2**bits - 1) * delta
+    x = delta * jax.random.randint(key, shape, 0, 2**bits).astype(jnp.float32)
+    for c in range(shape[2] // nb):
+        x = x.at[:, :, c * nb, :].set(0.0).at[:, :, c * nb + 1, :].set(top)
+    return x.at[:, :, :, 0].set(0.0).at[:, :, :, 1].set(top)
+
+
+@pytest.mark.parametrize("pol", ["kcvt4", "gear_l_kcvt4"])
+def test_streaming_prefill_matches_exact_attention_on_lattice(pol):
+    """Streaming == monolithic logits to 1e-5 when compression is lossless:
+    on lattice K/V the compressed history dequantizes exactly, so the
+    two-piece online softmax must reproduce plain causal attention — this
+    pins the whole streaming pipeline (masks, chunk splits, prefix views,
+    softmax merge) with no compression-error confound."""
+    nb, n = 16, 48
+    policy = dataclasses.replace(named_policy(pol), buffer_size=nb)
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    key = jax.random.PRNGKey(7)
+    k = _lattice(key, (B, H, n, DH), nb)
+    v = _lattice(jax.random.fold_in(key, 1), (B, H, n, DH), nb)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, H * 2, n, DH))
+    _, out = streaming_prefill_layer_cache(
+        cfg, init_layer_cache(cfg), q, k, v, DH**-0.5)
+    qf = q.reshape(B, H, 2, n, DH)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k) * DH**-0.5
+    s = jnp.where(jnp.tril(jnp.ones((n, n), bool))[None, None, None], s, -1e30)
+    ref = jnp.einsum("bhgqk,bhkd->bhgqd", jax.nn.softmax(s, axis=-1),
+                     v).reshape(B, H * 2, n, DH)
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+
+def test_streaming_prefill_attention_close_on_real_data():
+    """With real (lossy) compression the streaming output tracks exact
+    attention to within the policy's reconstruction error — the same
+    semantics gap decode already has against FP16 attention."""
+    policy = small_policy("gear_kcvt4")
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    n = 44
+    q, k, v = _qkv(n)
+    _, out = streaming_prefill_layer_cache(
+        cfg, init_layer_cache(cfg), q, k, v, DH**-0.5)
+    qf = q.reshape(B, H, 2, n, DH)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k) * DH**-0.5
+    s = jnp.where(jnp.tril(jnp.ones((n, n), bool))[None, None, None], s, -1e30)
+    ref = jnp.einsum("bhgqk,bhkd->bhgqd", jax.nn.softmax(s, axis=-1),
+                     v).reshape(B, H * 2, n, DH)
+    rel = jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)
+    assert float(rel) < 0.15, float(rel)
+    # tokens still inside the FP16 streaming buffer attend losslessly, so
+    # the first post-buffer rows (history-free) agree much tighter
+    assert jnp.allclose(out[:, :, :16], ref[:, :, :16], atol=1e-4)
+
+
+def test_streaming_prefill_windowed_and_fp16_gated():
+    """Non-GEAR caches have no compression event to stream."""
+    pol = named_policy("fp16")
+    cfgw = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64,
+                       policy=pol, kind="window", window=8)
+    q, k, v = _qkv(16)
+    with pytest.raises(ValueError, match="GEAR"):
+        streaming_prefill_layer_cache(cfgw, init_layer_cache(cfgw), q, k, v,
+                                      DH**-0.5)
+
+
+def test_streaming_prefill_interpret_kernels_jitter_bounded():
+    """Forcing the fused kernels (interpret mode) reproduces the oracle
+    path up to the documented round-half ±1 code jitter between separately
+    compiled programs; stats stay exact."""
+    policy = small_policy("gear_kcvt4")
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    q, k, v = _qkv(44)
+    mono = prefill_layer_cache(cfg, init_layer_cache(cfg), k, v)
+    stream, out = streaming_prefill_layer_cache(
+        cfg, init_layer_cache(cfg), q, k, v, DH**-0.5, fused="interpret")
+    for packed_s, packed_m in ((stream.k_packed, mono.k_packed),
+                               (stream.v_packed, mono.v_packed)):
+        diff = jnp.abs(packing.unpack(packed_s, policy.bits, DH)
+                       - packing.unpack(packed_m, policy.bits, DH))
+        assert int(diff.max()) <= 1
+        assert float((diff > 0).mean()) < 1e-3
+    assert (stream.k_scale == mono.k_scale).all()
+    assert (stream.v_scale == mono.v_scale).all()
+    assert (stream.k_sp_idx == mono.k_sp_idx).all()
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_fresh_batch1_cache_memoized():
+    """The batch-1 zero tree is built once per geometry (the splice path's
+    per-request allocation is hoisted — satellite of the streaming PR)."""
+    policy = small_policy("gear_kcvt4")
+    cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64, policy=policy)
+    one = fresh_batch1_cache(cfg)
+    again = fresh_batch1_cache(dataclasses.replace(cfg, batch=1))
+    assert one.k_packed is again.k_packed          # same memoized tree
+    assert one.k_packed.shape[0] == 1
+    other = fresh_batch1_cache(cfg, dtype=jnp.float32)
+    assert other.buf_k.dtype == jnp.float32        # dtype participates in key
+
+
+def test_streaming_prefill_rejects_unsupported_layouts():
+    """Layout gate: the history scorer needs per-channel K stats at chunk
+    granularity — finer groups and per-token-group backbones must raise at
+    the cache level (and fall back to monolithic at the model level)."""
+    from repro.core.cache import streaming_supported
+    q, k, v = _qkv(32)
+    fine = dataclasses.replace(named_policy("gear_kivi2"), buffer_size=32,
+                               group=16)                    # group != chunk
+    ptg = dataclasses.replace(named_policy("per_token_q4"), buffer_size=16,
+                              group=16)
+    for pol in (fine, ptg):
+        cfg = CacheConfig(batch=B, kv_heads=H, head_dim=DH, capacity=64,
+                          policy=pol)
+        assert not streaming_supported(cfg)
+        with pytest.raises(ValueError, match="per-channel K"):
+            streaming_prefill_layer_cache(cfg, init_layer_cache(cfg), q, k, v,
+                                          DH**-0.5)

@@ -178,3 +178,197 @@ def test_linear_scan_kernel_sweep(mode, S, Dk, Dv, chunk, rng):
                                     chunk=chunk, mode=mode, interpret=True)
     assert jnp.allclose(y_k.reshape(B, H, S, Dv), y_ref, atol=2e-3)
     assert jnp.allclose(st_k.reshape(B, H, Dk, Dv), st_ref, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused chunk compression (gear_compress)
+
+
+def _lattice_chunks(key, N, nb, d, bits=4, delta=0.5):
+    """Two-level {0, top} chunk batch: every quantization group, under ANY
+    grouping, sees scale = delta exactly (or the eps floor for constant
+    groups), and outlier removal keeps the remainder on the lattice — so
+    kernel-vs-oracle parity is deterministic, with no round-half fma
+    jitter to absorb, and the residual is exactly zero."""
+    top = (2**bits - 1) * delta
+    return top * jax.random.bernoulli(key, 0.5, (N, nb, d)).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("scheme,group,n_out", [
+    ("per_channel", None, 1), ("per_channel", 16, 1),
+    ("per_token", None, 2), ("per_token", 32, 2),
+    ("per_token_group", 16, 2), ("per_channel", None, 0),
+])
+def test_gear_compress_bit_identical_on_lattice(scheme, group, n_out, rng):
+    """The fused kernel's quant/stats/outlier outputs match the
+    compress_matrix pieces EXACTLY (packing bit-identical) on lattice data,
+    for both orientations, grouped stats, and the no-outlier path."""
+    from repro.kernels.gear_compress import gear_compress
+    x = _lattice_chunks(rng, 4, 32, 64)
+    outs_k = gear_compress(x, bits=4, scheme=scheme, group=group,
+                           n_out=n_out, interpret=True)
+    outs_r = ref.gear_compress_ref(x, bits=4, scheme=scheme, group=group,
+                                   n_out=n_out)
+    for name, a, b in zip(("packed", "scale", "zero", "sp_val", "sp_idx",
+                           "resid"), outs_k, outs_r):
+        if b is None:
+            assert a is None, name
+            continue
+        assert (jnp.asarray(a) == jnp.asarray(b)).all(), name
+    # lossless lattice => zero residual => zero low-rank factors downstream
+    assert (outs_k[5] == 0).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("scheme,n_out", [("per_channel", 1), ("per_token", 2)])
+def test_gear_compress_gaussian_jitter_bounded(bits, scheme, n_out, rng):
+    """On arbitrary data the kernel and the oracle are separately-compiled
+    programs: codes may flip ±1 on round-half boundaries (≪0.1% of entries,
+    same budget as quant_pack), stats and outliers stay exact."""
+    from repro.core import packing
+    from repro.kernels.gear_compress import gear_compress
+    x = jax.random.normal(rng, (4, 32, 64))
+    pk, sk, zk, svk, sik, rk = gear_compress(x, bits=bits, scheme=scheme,
+                                             n_out=n_out, interpret=True)
+    pr, sr, zr, svr, sir, rr = ref.gear_compress_ref(x, bits=bits,
+                                                     scheme=scheme, n_out=n_out)
+    assert jnp.allclose(sk, sr) and jnp.allclose(zk, zr)
+    assert (sik == sir).all() and jnp.allclose(svk, svr)
+    diff = jnp.abs(packing.unpack(pk, bits, 64) - packing.unpack(pr, bits, 64))
+    assert int(diff.max()) <= 1
+    assert float((diff > 0).mean()) < 1e-3
+    # residual differs only where a code flipped, by exactly one scale step
+    assert float(jnp.abs(rk - rr).max()) <= float(sk.max()) + 1e-6
+
+
+def test_gear_compress_pack_roundtrip(rng):
+    """Packed lanes invert through packing.unpack to in-range codes that
+    reproduce the remainder within half a quantization step."""
+    from repro.core import packing
+    from repro.kernels.gear_compress import gear_compress
+    x = jax.random.normal(rng, (2, 16, 64))
+    pk, sk, zk, _, _, _ = gear_compress(x, bits=4, scheme="per_channel",
+                                        n_out=0, interpret=True)
+    codes = packing.unpack(pk, 4, 64)
+    assert int(codes.min()) >= 0 and int(codes.max()) <= 15
+    deq = codes.astype(jnp.float32) * sk + zk      # sk/zk [N, 1, d] broadcast
+    assert float(jnp.abs(deq - x).max()) <= 0.5 * float(sk.max()) + 1e-5
+    assert (packing.pack(codes, 4) == pk).all()
+
+
+def test_gear_compress_orientations_match_cache_layout(rng):
+    """Output shapes line up with the cache's per-chunk storage layout."""
+    from repro.kernels.gear_compress import gear_compress
+    x = jax.random.normal(rng, (3, 32, 64))
+    pk, sk, zk, sv, si, r = gear_compress(x, bits=4, scheme="per_channel",
+                                          group=8, n_out=1, interpret=True)
+    assert pk.shape == (3, 32, 8) and sk.shape == (3, 4, 64)
+    assert sv.shape == (3, 64, 2) and r.shape == (3, 32, 64)
+    pk, sk, zk, sv, si, r = gear_compress(x, bits=4, scheme="per_token",
+                                          group=16, n_out=2, interpret=True)
+    assert sk.shape == (3, 32, 4) and sv.shape == (3, 32, 4)
+
+
+# ---------------------------------------------------------------------------
+# Streaming-prefill attention pieces
+
+
+@pytest.mark.parametrize("T,Dh,cap", [(16, 64, 0.0), (32, 128, 0.0), (16, 64, 20.0)])
+def test_flash_prefill_block_sweep(T, Dh, cap, rng):
+    from repro.kernels.flash_prefill import flash_prefill_block
+    q = jax.random.normal(rng, (4, T, Dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (4, T, Dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (4, T, Dh))
+    kv_len = jnp.asarray([T, T // 2, 1, 0], jnp.int32)   # full/partial/one/empty
+    a_k, m_k, l_k = flash_prefill_block(q, k, v, kv_len, scale=Dh**-0.5,
+                                        softcap=cap, interpret=True)
+    a_r, m_r, l_r = ref.flash_block_ref(q, k, v, kv_len, scale=Dh**-0.5,
+                                        softcap=cap)
+    assert jnp.allclose(m_k[..., 0], m_r, atol=1e-5)
+    assert jnp.allclose(l_k[..., 0], l_r, atol=1e-4)
+    assert jnp.allclose(a_k, a_r, atol=1e-4)
+
+
+def test_gear_hist_block_ref_matches_gear_decode_ref(rng):
+    """The streaming history scorer (densified fast path) and the decode
+    oracle (factored path) are the same math."""
+    cfg, common, extras = _cache_arrays("gear_kcvt4", Dh=64, S=128, n=128, nb=32)
+    arrays = common[:-1]
+    q = jax.random.normal(rng, (4, 48, 64))     # block of G*T query rows
+    kwargs = dict(bits=4, chunk=32, scale_factor=64**-0.5)
+    for n_comp in (jnp.int32(0), jnp.int32(64), jnp.asarray([0, 32, 96, 128])):
+        acc_a, m_a, l_a = ref.gear_decode_ref(q, *arrays, n_comp, **kwargs, **extras)
+        acc_b, m_b, l_b = ref.gear_hist_block_ref(q, *arrays, n_comp, **kwargs, **extras)
+        assert jnp.allclose(m_a, m_b, atol=1e-4)
+        assert jnp.allclose(l_a, l_b, rtol=1e-5, atol=1e-4)
+        mask = l_a[..., None] > 1e-20
+        assert jnp.allclose(jnp.where(mask, acc_a, 0), jnp.where(mask, acc_b, 0),
+                            rtol=1e-4, atol=1e-3)
+
+
+def test_gear_attend_block_kernel_matches_oracle(rng):
+    """The full streaming attention step — gear_decode history + flash
+    block + two-piece merge — agrees between forced-interpret kernels and
+    the jnp oracles."""
+    import dataclasses as dc
+    from repro.core import CacheConfig as CC
+    from repro.core import named_policy as np_
+    from repro.core import init_layer_cache as ilc, prefill_layer_cache as plc
+    from repro.kernels import ops as kernel_ops
+    pol = dc.replace(np_("gear_kcvt4"), buffer_size=16)
+    cfg = CC(batch=2, kv_heads=2, head_dim=64, capacity=64, policy=pol)
+    k = jax.random.normal(rng, (2, 2, 48, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (2, 2, 48, 64))
+    cache = plc(cfg, ilc(cfg), k, v)
+    q = jax.random.normal(jax.random.fold_in(rng, 2), (2, 4, 16, 64))
+    k_blk = jax.random.normal(jax.random.fold_in(rng, 3), (2, 2, 16, 64))
+    v_blk = jax.random.normal(jax.random.fold_in(rng, 4), (2, 2, 16, 64))
+    for n_comp, blk_len in ((32, 16), (0, 16), (48, 5)):
+        o_ref = kernel_ops.gear_attend_block(cfg, cache, q, k_blk, v_blk,
+                                             n_comp, blk_len, 64**-0.5)
+        o_krn = kernel_ops.gear_attend_block(cfg, cache, q, k_blk, v_blk,
+                                             n_comp, blk_len, 64**-0.5,
+                                             force_kernel=True, interpret=True)
+        valid = o_ref[:, :, :blk_len]
+        assert jnp.allclose(o_krn[:, :, :blk_len], valid, atol=1e-4), (n_comp, blk_len)
+
+
+def test_attention_train_flash_impl_matches_chunked(rng):
+    """Satellite: the monolithic full-sequence path dispatches through the
+    flash_prefill kernel (interpret mode here) and agrees with the scanned
+    XLA blocks within bf16 score resolution — causal, windowed, and
+    softcapped variants."""
+    import dataclasses as dc
+    from repro.configs.base import ModelConfig
+    from repro.models import attention as attn_lib
+    from repro.models.common import KeyGen
+    base = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=64)
+    cases = [
+        (base, "global"),
+        (dc.replace(base, attn_pattern="local_global", local_window=8), "local"),
+        (dc.replace(base, attn_logit_softcap=20.0), "global"),
+    ]
+    for cfg, kind in cases:
+        params = attn_lib.attn_params(cfg, KeyGen(jax.random.PRNGKey(0)))
+        x = jax.random.normal(rng, (2, 48, 64), jnp.bfloat16)
+        pos = jnp.arange(48, dtype=jnp.int32)
+        out_c, (k_c, v_c) = attn_lib.attention_train(cfg, params, x, pos, kind)
+        out_f, (k_f, v_f) = attn_lib.attention_train(cfg, params, x, pos, kind,
+                                                     impl="flash-interpret")
+        assert (k_c == k_f).all() and (v_c == v_f).all()   # same projections
+        assert jnp.allclose(out_c.astype(jnp.float32), out_f.astype(jnp.float32),
+                            atol=3e-2), kind
+
+
+def test_flash_prefill_kv_repeat_matches_broadcast(rng):
+    """GQA via the kv_repeat index map == explicitly broadcast K/V."""
+    q = jax.random.normal(rng, (8, 64, 64), jnp.float32)        # B*Hkv*G = 8
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (4, 64, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (4, 64, 64))
+    o_map = flash_prefill(q, k, v, bq=32, bk=32, kv_repeat=2, interpret=True)
+    kb = jnp.repeat(k, 2, axis=0)
+    vb = jnp.repeat(v, 2, axis=0)
+    o_rep = flash_prefill(q, kb, vb, bq=32, bk=32, interpret=True)
+    assert jnp.allclose(o_map, o_rep, atol=1e-6)

@@ -103,3 +103,40 @@ def test_committed_baseline_is_governed_and_loadable():
 def test_empty_bench_dir_is_loud(tmp_path):
     with pytest.raises(SystemExit):
         main([str(tmp_path / "nothing"), "--baseline", "x.json"])
+
+
+def test_peak_bytes_rule_and_governance():
+    """prefill_peak_bytes rows are governed with 5% compiler headroom —
+    growth beyond it fails, shrink and small jitter pass."""
+    assert governed("prefill_peak_bytes/streaming")
+    base = {"prefill_peak_bytes/streaming": 1000.0}
+    assert check(base, {"prefill_peak_bytes/streaming": 1040.0}, tol=0.15) == []
+    assert check(base, {"prefill_peak_bytes/streaming": 500.0}, tol=0.15) == []
+    fails = check(base, {"prefill_peak_bytes/streaming": 1100.0}, tol=0.15)
+    assert len(fails) == 1 and "peak_bytes" in fails[0]
+    # custom headroom
+    assert check(base, {"prefill_peak_bytes/streaming": 1100.0}, tol=0.15,
+                 mem_tol=0.2) == []
+
+
+def test_derate_never_touches_ratio_rows(tmp_path):
+    """--derate must leave *_over_* ratio floors exact even when the row
+    name also contains tok_per_s (prefill_tok_per_s/streaming_over_monolithic)
+    — otherwise the documented refresh command would silently weaken the
+    machine-independent prefill guard."""
+    out = tmp_path / "bench-out"
+    out.mkdir()
+    rows = [{"name": n, "us_per_call": 0.0, "derived": "", "value": v}
+            for n, v in {
+                "prefill_tok_per_s/streaming": 2000.0,
+                "prefill_tok_per_s/streaming_over_monolithic": 1.2,
+                "prefill_peak_bytes/streaming": 1000.0,
+            }.items()]
+    (out / "t.json").write_text(json.dumps(rows))
+    baseline = tmp_path / "baseline.json"
+    assert main([str(out), "--baseline", str(baseline),
+                 "--write-baseline", "--derate", "0.5"]) == 0
+    written = json.loads(baseline.read_text())
+    assert written["prefill_tok_per_s/streaming"] == 1000.0               # derated
+    assert written["prefill_tok_per_s/streaming_over_monolithic"] == 1.2  # exact
+    assert written["prefill_peak_bytes/streaming"] == 1000.0              # exact
