@@ -1,0 +1,167 @@
+"""Prefix-cache bench: cross-request prefill reuse on a shared-prefix
+workload, at bit-exact logits parity.
+
+The headline serving win of the radix-trie prefix cache
+(``EngineConfig.prefix_cache``, repro.prefixcache): requests sharing a
+chunk-aligned prompt prefix splice the prefix's compressed GEAR chunks
+from the trie and run streaming prefill only on their suffix — prefill
+time shrinks near-linearly with the shared fraction, and because chunk
+compression is slot-invariant the warm path is **bit-identical** to a cold
+prefill (asserted per request in-bench).
+
+* **smoke** (CI): N requests sharing 80% of a 10-chunk prompt, prefix
+  cache on vs off.  Gates: >= ``SPEEDUP_FLOOR``x prefill tok/s with the
+  cache on, the canned workload's exact hit rate / saved-token count
+  (deterministic — any drop is a trie/admission regression), and logits
+  parity.  The ``value`` rows feed the CI regression gate
+  (benchmarks/check_regression.py): ``prefix/prefill_tok_per_s_*`` under
+  the throughput rule, ``prefix/cached_over_off`` as the
+  machine-independent ratio guard, ``prefix/hit_rate`` +
+  ``prefix/prefill_toks_saved`` under the exact-floor rule.
+* **full**: additionally sweeps the shared-prefix fraction to show the
+  near-linear prefill-time reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import ModelConfig
+from repro.core.policy import named_policy
+from repro.models.model import build_model
+from repro.serving.engine import Engine, EngineConfig
+
+BENCH_CFG = ModelConfig(name="bench-prefix", family="dense", num_layers=2,
+                        d_model=128, num_heads=4, num_kv_heads=2, head_dim=64,
+                        d_ff=256, vocab_size=512)
+POLICY = named_policy("gear_kcvt4")        # n_b = 64
+N_CHUNKS = 10
+PROMPT_LEN = N_CHUNKS * POLICY.buffer_size  # 640 tokens
+N_REQ = 8
+SHARED_CHUNKS = 8                           # 80% of the prompt
+SPEEDUP_FLOOR = 1.5
+
+
+def _workload(shared_chunks: int, seed: int = 0) -> list[np.ndarray]:
+    """N_REQ equal-length prompts sharing their first ``shared_chunks``
+    chunks (one long system prompt + per-request user suffix)."""
+    nb = POLICY.buffer_size
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, BENCH_CFG.vocab_size, size=shared_chunks * nb)
+    return [np.concatenate([shared, rng.randint(0, BENCH_CFG.vocab_size,
+                                                size=PROMPT_LEN - shared.size)])
+            for _ in range(N_REQ)]
+
+
+def _run_workload(eng: Engine, prompts, check_against=None):
+    """Prefill every prompt through ``prefill_slot``; returns (seconds,
+    logits list).  ``check_against`` asserts per-request bit-parity."""
+    caches = eng.init_caches()
+    logits_all = []
+    t0 = time.perf_counter()
+    for prompt in prompts:
+        logits, caches = eng.prefill_slot(
+            {"tokens": jnp.asarray(prompt[None], jnp.int32)}, caches, 0)
+        jax.block_until_ready(logits)
+        logits_all.append(np.asarray(logits))
+    dt = time.perf_counter() - t0
+    if check_against is not None:
+        for i, (a, b) in enumerate(zip(check_against, logits_all)):
+            assert np.array_equal(a, b), f"request {i}: warm logits != cold"
+    return dt, logits_all
+
+
+def _measure(eng: Engine, prompts, iters: int, check_against=None):
+    """Median workload seconds; each iteration starts from an empty prefix
+    cache so the hit pattern is the canned one (first request cold)."""
+    times = []
+    logits = None
+    for _ in range(iters + 1):             # +1 warmup (compiles)
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.clear()
+        dt, logits = _run_workload(eng, prompts, check_against)
+        times.append(dt)
+    times = sorted(times[1:])
+    return times[len(times) // 2], logits
+
+
+def run(smoke: bool = False):
+    model = build_model(BENCH_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    base = EngineConfig(batch=1, capacity=PROMPT_LEN + POLICY.buffer_size,
+                        policy=POLICY, prefill_mode="streaming")
+    eng_off = Engine(model, params, base)
+    eng_on = Engine(model, params,
+                    dataclasses.replace(base, prefix_cache=True))
+    iters = 2 if smoke else 5
+
+    prompts = _workload(SHARED_CHUNKS)
+    t_off, logits_cold = _measure(eng_off, prompts, iters)
+    stats0 = eng_on.prefix_cache.stats
+    t_on, _ = _measure(eng_on, prompts, iters, check_against=logits_cold)
+    stats1 = eng_on.prefix_cache.stats
+
+    total_toks = N_REQ * PROMPT_LEN
+    tok_off = total_toks / t_off
+    tok_on = total_toks / t_on
+    speedup = tok_on / tok_off
+    # per measured run: request 1 misses, requests 2..N hit the shared
+    # chunks; the last eligible chunk is each request's own random suffix
+    eligible = (PROMPT_LEN - 1) // POLICY.buffer_size          # 9 per request
+    lookups = stats1["lookup_chunks"] - stats0["lookup_chunks"]
+    hits = stats1["hit_chunks"] - stats0["hit_chunks"]
+    hit_rate = hits / max(lookups, 1)
+    want_rate = (N_REQ - 1) * SHARED_CHUNKS / (N_REQ * eligible)
+    runs = iters + 1
+    toks_saved_run = (stats1["prefill_toks_saved"]
+                      - stats0["prefill_toks_saved"]) // runs
+
+    emit("prefix/prefill_tok_per_s_off", 0.0,
+         f"{tok_off:.0f} tok/s cold ({N_REQ} x {PROMPT_LEN}-token prompts, "
+         f"{SHARED_CHUNKS}/{N_CHUNKS} chunks shared)", value=tok_off)
+    emit("prefix/prefill_tok_per_s_cached", 0.0,
+         f"{tok_on:.0f} tok/s with prefix cache", value=tok_on)
+    emit("prefix/cached_over_off", 0.0,
+         f"{speedup:.2f}x (gate: >= {SPEEDUP_FLOOR}x)", value=speedup)
+    emit("prefix/hit_rate", 0.0,
+         f"{hit_rate:.3f} of eligible prompt chunks served from the trie "
+         f"(expected {want_rate:.3f})", value=hit_rate)
+    emit("prefix/prefill_toks_saved", 0.0,
+         f"{toks_saved_run} prefill tokens skipped per workload run",
+         value=toks_saved_run)
+
+    assert abs(hit_rate - want_rate) < 1e-9, (hit_rate, want_rate)
+    assert toks_saved_run == (N_REQ - 1) * SHARED_CHUNKS * POLICY.buffer_size
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"prefix cache speedup {speedup:.2f}x below floor {SPEEDUP_FLOOR}x")
+
+    if not smoke:
+        # near-linear prefill-time reduction with shared-prefix fraction
+        for shared in (0, 2, 4, 6, 9):
+            sweep = _workload(shared, seed=shared + 1)
+            t_sw, _ = _measure(eng_on, sweep, iters)
+            emit(f"prefix/sweep_tok_per_s/shared_{shared}0pct", 0.0,
+                 f"{total_toks / t_sw:.0f} tok/s at {shared}/{N_CHUNKS} "
+                 "chunks shared", value=total_toks / t_sw)
+    return speedup, hit_rate
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing iterations (CI)")
+    ap.add_argument("--json", default=None,
+                    help="also write the emitted rows to this JSON file")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)

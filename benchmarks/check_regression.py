@@ -19,6 +19,9 @@ in the committed baseline against the freshly-measured rows and fails on:
   few percent across compiler releases — a real peak-memory regression
   (e.g. the streaming pipeline re-materializing FP16 history) is far
   larger;
+* ``*hit_rate*`` / ``*toks_saved*`` — ANY drop (the canned shared-prefix
+  workload of bench_prefix is deterministic: fewer trie hits means the
+  prefix cache stopped matching or admission broke, so zero tolerance);
 * metrics missing from the bench output (a silently-dropped bench row must
   fail loudly, not skip the gate).
 
@@ -65,7 +68,7 @@ def load_rows(bench_dir: str) -> dict[str, float]:
 
 def governed(name: str) -> bool:
     return ("tok_per_s" in name or "nbytes" in name or "peak_bytes" in name
-            or "_over_" in name)
+            or "_over_" in name or "hit_rate" in name or "toks_saved" in name)
 
 
 def check(baseline: dict[str, float], rows: dict[str, float],
@@ -77,6 +80,10 @@ def check(baseline: dict[str, float], rows: dict[str, float],
             failures.append(f"{name}: missing from bench output (baseline {ref:g})")
         elif "nbytes" in name and new > ref:
             failures.append(f"{name}: {new:g} bytes > baseline {ref:g} (any growth fails)")
+        elif ("hit_rate" in name or "toks_saved" in name) and new < ref - 1e-9:
+            failures.append(
+                f"{name}: {new:g} < baseline {ref:g} (deterministic canned "
+                "workload: any drop fails)")
         elif "peak_bytes" in name:
             if new > ref * (1.0 + mem_tol):
                 failures.append(

@@ -70,6 +70,8 @@ __all__ = [
     "append_token",
     "attend",
     "dense_kv",
+    "extract_prefix_chunks",
+    "splice_prefix_chunks",
     "splice_slot",
     "reset_slot",
     "prefill_into_slot",
@@ -333,14 +335,18 @@ def _flatten_stat(cfg: CacheConfig, stat: jnp.ndarray, kind: str) -> jnp.ndarray
 
 
 def _store_prefill_chunks(cfg: CacheConfig, upd: dict, comp: dict,
-                          n_full: int) -> dict:
-    """Write one compression event's ``C' = n_full / n_b`` chunks (token 0
-    onward) into the cache arrays of ``upd``.  Shared by monolithic prefill
-    (one batched event) and streaming prefill (per-chunk events stacked by
-    the compression scan — same layout either way)."""
+                          n_full: int, start_chunk: int = 0) -> dict:
+    """Write one compression event's ``C' = n_full / n_b`` chunks into the
+    cache arrays of ``upd`` starting at chunk ``start_chunk`` (token
+    ``start_chunk * n_b``).  Shared by monolithic prefill (one batched
+    event, offset 0), streaming prefill (per-chunk events stacked by the
+    compression scan — same layout either way), and suffix prefill over a
+    cached prefix (``start_chunk`` = chunks already spliced from the prefix
+    cache)."""
     pol = cfg.policy
     B, H = upd["k_packed"].shape[:2]
-    z4 = (0, 0, 0, 0)
+    t0 = start_chunk * cfg.chunk
+    z4 = (0, 0, t0, 0)
     upd["k_packed"] = jax.lax.dynamic_update_slice(
         upd["k_packed"], comp["k_packed"].reshape(B, H, n_full, -1), z4)
     upd["v_packed"] = jax.lax.dynamic_update_slice(
@@ -348,13 +354,15 @@ def _store_prefill_chunks(cfg: CacheConfig, upd: dict, comp: dict,
     for kv in ("k", "v"):
         stat_s = _flatten_stat(cfg, comp[f"{kv}_scale"], kv)
         stat_z = _flatten_stat(cfg, comp[f"{kv}_zero"], kv)
-        upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(upd[f"{kv}_scale"], stat_s, z4)
-        upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(upd[f"{kv}_zero"], stat_z, z4)
+        rpc = stat_s.shape[2] // max(n_full // cfg.chunk, 1)
+        zs = (0, 0, start_chunk * rpc, 0)
+        upd[f"{kv}_scale"] = jax.lax.dynamic_update_slice(upd[f"{kv}_scale"], stat_s, zs)
+        upd[f"{kv}_zero"] = jax.lax.dynamic_update_slice(upd[f"{kv}_zero"], stat_z, zs)
         if pol.use_lowrank:
             a = comp[f"{kv}_a"].reshape(B, H, n_full, pol.rank)
             upd[f"{kv}_a"] = jax.lax.dynamic_update_slice(upd[f"{kv}_a"], a, z4)
             upd[f"{kv}_b"] = jax.lax.dynamic_update_slice(
-                upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, 0, 0, 0))
+                upd[f"{kv}_b"], comp[f"{kv}_b"], (0, 0, start_chunk, 0, 0))
         if pol.use_sparse:
             sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
             if kv == "v" or cfg.k_scheme()[0] != "per_channel":
@@ -364,9 +372,9 @@ def _store_prefill_chunks(cfg: CacheConfig, upd: dict, comp: dict,
                 upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(upd[f"{kv}_sp_idx"], si, z4)
             else:
                 upd[f"{kv}_sp_val"] = jax.lax.dynamic_update_slice(
-                    upd[f"{kv}_sp_val"], sv, (0, 0, 0, 0, 0))
+                    upd[f"{kv}_sp_val"], sv, (0, 0, start_chunk, 0, 0))
                 upd[f"{kv}_sp_idx"] = jax.lax.dynamic_update_slice(
-                    upd[f"{kv}_sp_idx"], si, (0, 0, 0, 0, 0))
+                    upd[f"{kv}_sp_idx"], si, (0, 0, start_chunk, 0, 0))
     return upd
 
 
@@ -471,9 +479,10 @@ def chunk_prefix_view(cfg: CacheConfig, cache, n_chunks: int):
 
 
 def _assemble_scanned_chunks(cfg: CacheConfig, upd: dict, comp_s: dict,
-                             n_full: int) -> dict:
+                             n_full: int, start_chunk: int = 0) -> dict:
     """Stack a compression scan's per-chunk outputs (leaves [C', B, H, 1,
-    ...]) into the batched-event layout and store them from token 0."""
+    ...]) into the batched-event layout and store them from chunk
+    ``start_chunk`` (token 0 for a cold prefill)."""
     B, H = upd["k_packed"].shape[:2]
 
     def stack(t):
@@ -481,7 +490,7 @@ def _assemble_scanned_chunks(cfg: CacheConfig, upd: dict, comp_s: dict,
         return jnp.moveaxis(t, 0, 2).reshape((B, H, C) + t.shape[4:])
 
     return _store_prefill_chunks(cfg, upd, {kk: stack(t) for kk, t in comp_s.items()},
-                                 n_full)
+                                 n_full, start_chunk)
 
 
 def streaming_supported(cfg: CacheConfig) -> bool:
@@ -504,7 +513,7 @@ def streaming_supported(cfg: CacheConfig) -> bool:
 def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
                                tail_x, project, scale: float,
                                key: jax.Array | None = None,
-                               fused: str = "auto"):
+                               fused: str = "auto", start_chunk: int = 0):
     """Shared driver of the streaming chunked prefill (compress-as-you-go).
 
     ``chunk_xs`` is a pytree of per-chunk inputs with a leading ``[C']``
@@ -531,6 +540,14 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
     Leftover tokens attend the same way (against the prefix view of the
     populated chunks only) and land in the FP16 streaming buffer.  Returns
     (cache, attn_out [B, Hq, n, Dh]).
+
+    ``start_chunk`` > 0 runs the same pipeline as a **suffix** over a cache
+    whose first ``start_chunk`` chunks are already populated (spliced from
+    the prefix cache): new chunks are stored from chunk ``start_chunk``,
+    every attend sees the cached chunks as compressed history (the global
+    extent masks make each suffix chunk's output bit-identical to the cold
+    run that computed those chunks itself), and the final length covers
+    prefix + suffix.  ``n`` stays the *suffix* token count.
     """
     if not streaming_supported(cfg):
         raise ValueError(
@@ -546,6 +563,10 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
     C_new = n // nb
     n_full = C_new * nb
     rem = n - n_full
+    if start_chunk * nb + n > cfg.capacity:
+        raise ValueError(
+            f"suffix prefill past capacity: start_chunk {start_chunk} * "
+            f"{nb} + {n} tokens > capacity {cfg.capacity}")
     force = fused == "interpret"
     oracle = fused == "off"          # pin the jnp oracles even on TPU
     B = cache.length.shape[0]
@@ -563,18 +584,30 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
         _, comp_s = jax.lax.scan(body_compress, None, chunk_xs)
         upd = {f.name: getattr(cache, f.name)
                for f in dataclasses.fields(GEARLayerCache)}
-        cache = GEARLayerCache(**_assemble_scanned_chunks(cfg, upd, comp_s, n_full))
+        cache = GEARLayerCache(**_assemble_scanned_chunks(cfg, upd, comp_s,
+                                                          n_full, start_chunk))
 
         out_parts = []
-        for lo, hi in _attend_segments(C_new):
-            view = chunk_prefix_view(cfg, cache, hi)
+        # Segment over the GLOBAL chunk range, then clip to the suffix: a
+        # suffix chunk attends through exactly the prefix-view width the
+        # cold run's schedule gave it, so the score shapes — and therefore
+        # the float bits XLA's width-dependent reductions produce — match
+        # the cold run, not just the masked math (start_chunk == 0 reduces
+        # to plain segmentation of C_new).
+        for g_lo, g_hi in _attend_segments(start_chunk + C_new):
+            lo = max(g_lo - start_chunk, 0)
+            hi = g_hi - start_chunk
+            if hi <= lo:
+                continue               # segment fully inside the cached prefix
+            view = chunk_prefix_view(cfg, cache, g_hi)
 
             def body_attend(_, xs, view=view):
                 c, x_c = xs
                 q_c, k_c, v_c = project(x_c)
                 out_c = kernel_ops.gear_attend_block(
-                    cfg, view, q_c, k_c, v_c, c * nb, nb, scale,
-                    force_kernel=force, interpret=force, force_oracle=oracle)
+                    cfg, view, q_c, k_c, v_c, (start_chunk + c) * nb, nb,
+                    scale, force_kernel=force, interpret=force,
+                    force_oracle=oracle)
                 return None, out_c
 
             seg_xs = jax.tree.map(lambda t: t[lo:hi], chunk_xs)
@@ -587,9 +620,9 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
         outs.append(jnp.moveaxis(outs_s, 0, 2).reshape(B, Hq, n_full, Dh))
     if rem:
         q_t, k_t, v_t = project(tail_x)
-        view = chunk_prefix_view(cfg, cache, max(C_new, 1))
+        view = chunk_prefix_view(cfg, cache, max(start_chunk + C_new, 1))
         out_t = kernel_ops.gear_attend_block(
-            cfg, view, q_t, k_t, v_t, n_full, rem, scale,
+            cfg, view, q_t, k_t, v_t, start_chunk * nb + n_full, rem, scale,
             force_kernel=force, interpret=force, force_oracle=oracle)
         z4 = (0, 0, 0, 0)
         cache = dataclasses.replace(
@@ -600,14 +633,15 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
                 cache.buf_v, v_t.astype(cache.buf_v.dtype), z4))
         outs.append(out_t)
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
-    cache = dataclasses.replace(cache, length=jnp.full((B,), n, jnp.int32))
+    cache = dataclasses.replace(
+        cache, length=jnp.full((B,), start_chunk * nb + n, jnp.int32))
     return cache, out
 
 
 def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
                                   k: jnp.ndarray, v: jnp.ndarray,
                                   scale: float, key: jax.Array | None = None,
-                                  fused: str = "auto"):
+                                  fused: str = "auto", start_chunk: int = 0):
     """Streaming chunked prefill over precomputed q/k/v (reference entry).
 
     q: [B, Hq, n, Dh]; k, v: [B, H, n, Dh] — sliced per chunk into
@@ -624,6 +658,8 @@ def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
     Returns (cache, attn_out [B, Hq, n, Dh] in q's dtype).
     ``fused``: "auto"/"off" (kernels on TPU, jnp oracles elsewhere) or
     "interpret" (force the Pallas kernels in interpret mode).
+    ``start_chunk`` > 0 treats q/k/v as the *suffix* after that many
+    already-populated chunks of ``cache`` (the prefix-cache splice path).
     """
     pol_nb = cfg.chunk
     B, Hq, n, Dh = q.shape
@@ -639,7 +675,8 @@ def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
     tail_x = ((q[:, :, n_full:], k[:, :, n_full:], v[:, :, n_full:])
               if n > n_full else None)
     return streaming_prefill_pipeline(cfg, cache, n, chunk_xs, tail_x,
-                                      lambda x: x, scale, key, fused)
+                                      lambda x: x, scale, key, fused,
+                                      start_chunk)
 
 
 def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,
@@ -945,6 +982,104 @@ def attend(cfg: CacheConfig, cache, q: jnp.ndarray, scale: float,
     out = out + jnp.einsum("bhgn,bhnd->bhgd", w_buf.astype(cdt),
                            cache.buf_v.astype(cdt), preferred_element_type=f32)
     return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-chunk extraction / splicing (cross-request prefix cache)
+
+
+def _chunk_row_axes(cfg: CacheConfig) -> dict[str, tuple[int, int]]:
+    """Chunk-indexed row layout of every GEAR cache array.
+
+    Maps field name -> ``(rows_per_chunk, row_axis_from_end)``: chunk ``c``
+    of a cache array occupies rows ``[c * rows_per_chunk, (c+1) *
+    rows_per_chunk)`` along the given axis (counted from the end, so the
+    same spec serves plain ``[B, H, ...]`` layer caches and the engine's
+    repeat-stacked ``[R, B, H, ...]`` leaves).  Buffer / length leaves are
+    deliberately absent: they are per-slot streaming state, never part of a
+    chunk.
+    """
+    if cfg.kind != "gear":
+        raise ValueError(f"prefix chunks require a GEAR cache, got {cfg.kind!r}")
+    pol = cfg.policy
+    nb = cfg.chunk
+    C = cfg.n_chunks
+    spec: dict[str, tuple[int, int]] = {
+        "k_packed": (nb, -2), "v_packed": (nb, -2),
+        "k_scale": (_k_stat_rows(cfg)[0] // C, -2),
+        "k_zero": (_k_stat_rows(cfg)[0] // C, -2),
+        "v_scale": (_v_stat_rows(cfg)[0] // C, -2),
+        "v_zero": (_v_stat_rows(cfg)[0] // C, -2),
+    }
+    if pol.use_lowrank:
+        spec.update(k_a=(nb, -2), v_a=(nb, -2), k_b=(1, -3), v_b=(1, -3))
+    if pol.use_sparse:
+        k_chan = cfg.k_scheme()[0] == "per_channel"
+        spec.update(k_sp_val=(1, -3) if k_chan else (nb, -2),
+                    k_sp_idx=(1, -3) if k_chan else (nb, -2),
+                    v_sp_val=(nb, -2), v_sp_idx=(nb, -2))
+    return spec
+
+
+def extract_prefix_chunks(cfg: CacheConfig, cache, n_chunks: int,
+                          start_chunk: int = 0) -> list[dict]:
+    """Slice chunks ``[start_chunk, start_chunk + n_chunks)`` of a GEAR
+    layer cache into independent per-chunk payload dicts.
+
+    Works on a plain ``[B, H, ...]`` layer cache or on one position of the
+    engine's repeat-stacked tree (leaves ``[R, B, H, ...]``): the chunk row
+    axes are addressed from the end, so extra leading dims pass through.
+    Each payload holds every compressed-array slice of one chunk (packed
+    codes, quant stats, low-rank factors, outliers) — exactly the state
+    :func:`splice_prefix_chunks` needs to reproduce the chunk in any slot
+    of any cache with the same geometry.  Buffer and length are not
+    extracted (a cached prefix is always chunk-aligned).
+    """
+    spec = _chunk_row_axes(cfg)
+    out = []
+    for c in range(start_chunk, start_chunk + n_chunks):
+        payload = {}
+        for field, (rpc, ax) in spec.items():
+            arr = getattr(cache, field)
+            idx = [slice(None)] * arr.ndim
+            idx[arr.ndim + ax] = slice(c * rpc, (c + 1) * rpc)
+            payload[field] = arr[tuple(idx)]
+        out.append(payload)
+    return out
+
+
+def splice_prefix_chunks(cfg: CacheConfig, cache, slot, chunks: list[dict],
+                         start_chunk: int = 0, batch_axis: int = 0):
+    """Write per-chunk payloads (from :func:`extract_prefix_chunks`) into
+    batch row ``slot`` of ``cache`` as chunks ``[start_chunk, start_chunk +
+    len(chunks))``.
+
+    The payloads are concatenated per field and written with one
+    ``dynamic_update_slice`` each — the same batch-row write the slot-
+    splice protocol uses.  ``batch_axis`` is 0 for a single layer cache and
+    1 for the engine's repeat-stacked ``[R, B, ...]`` leaves.  ``length``
+    is left untouched: the caller owns it (suffix prefill sets it to
+    prefix + suffix).  Pass-through leaves the chunk spec does not cover
+    (streaming buffer, length) alias ``cache``'s arrays, so the result
+    must NOT be donated into a jitted program while ``cache`` (e.g. the
+    engine's memoized empty scaffold) is still live.
+    """
+    if not chunks:
+        return cache
+    slot = jnp.asarray(slot, jnp.int32)
+    spec = _chunk_row_axes(cfg)
+    upd = {}
+    for field, (rpc, ax) in spec.items():
+        dst = getattr(cache, field)
+        row_axis = dst.ndim + ax
+        parts = [ch[field] for ch in chunks]
+        seg = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=row_axis)
+        starts = [jnp.asarray(0, jnp.int32)] * dst.ndim
+        starts[batch_axis] = slot
+        starts[row_axis] = jnp.asarray(start_chunk * rpc, jnp.int32)
+        upd[field] = jax.lax.dynamic_update_slice(
+            dst, seg.astype(dst.dtype), tuple(starts))
+    return dataclasses.replace(cache, **upd)
 
 
 # ---------------------------------------------------------------------------

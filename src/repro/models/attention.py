@@ -181,7 +181,8 @@ def streaming_prefill_supported(cfg: ModelConfig, kind: str,
 
 def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
                                 kind: str, cache_cfg, key=None,
-                                fused: str = "auto", dtype=jnp.bfloat16):
+                                fused: str = "auto", dtype=jnp.bfloat16,
+                                cache=None, start_pos: int = 0):
     """Streaming chunked prefill of one attention layer: project → compress
     → attend, one ``n_b``-token chunk at a time under two carry-free
     ``lax.scan`` passes (loop fission of the compress-as-you-go pipeline —
@@ -198,11 +199,21 @@ def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
     history + FP16 buffer).  Leftover tokens land in the streaming buffer.
     Returns (out [B, S, d_model], layer cache); the cache is bit-identical
     to a monolithic prefill of the same tokens.
+
+    ``start_pos`` > 0 (with ``cache`` holding ``start_pos / n_b`` chunks
+    already spliced from the prefix cache) runs the suffix path: ``x`` /
+    ``positions`` cover only the tokens after the cached prefix, new
+    chunks are stored from that offset, and every attend sees the cached
+    chunks as compressed history — bit-identical to the cold prefill that
+    would have computed them (DESIGN.md §4).
     """
     B, S, _ = x.shape
     nb = cache_cfg.chunk
+    if start_pos % nb:
+        raise ValueError(f"start_pos {start_pos} not aligned to chunk {nb}")
     scale = cfg.head_dim ** -0.5
-    cache = cache_lib.init_layer_cache(cache_cfg, dtype)
+    if cache is None:
+        cache = cache_lib.init_layer_cache(cache_cfg, dtype)
     C_new = S // nb
     n_full = C_new * nb
 
@@ -218,7 +229,8 @@ def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
                     positions[:n_full].reshape(C_new, nb))
     tail_x = (x[:, n_full:], positions[n_full:]) if S > n_full else None
     cache, out = cache_lib.streaming_prefill_pipeline(
-        cache_cfg, cache, S, chunk_xs, tail_x, project, scale, key, fused)
+        cache_cfg, cache, S, chunk_xs, tail_x, project, scale, key, fused,
+        start_chunk=start_pos // nb)
     out = jnp.moveaxis(out, 1, 2).reshape(B, S, cfg.q_dim).astype(x.dtype)
     return out @ params["wo"].astype(x.dtype), cache
 

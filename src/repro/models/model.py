@@ -72,6 +72,27 @@ class Model:
                                         prefill_mode=prefill_mode, fused=fused)
         return logits, caches
 
+    def prefill_suffix(self, params, batch: dict, caches, start_pos: int,
+                       policy: CompressionPolicy, capacity: int,
+                       fused: str = "auto"):
+        """Suffix-offset prefill over a cache holding a chunk-aligned prefix.
+
+        ``batch`` covers only the tokens after the cached prefix;
+        ``caches`` is a cache tree whose first ``start_pos / n_b`` chunks
+        were spliced from the prefix cache
+        (:func:`repro.core.cache.splice_prefix_chunks`).  Runs the
+        streaming pipeline on the suffix with the prefix visible as
+        compressed history — the engine's prefix-cache hit path
+        (:meth:`repro.serving.engine.Engine.prefill_slot`); the resulting
+        cache and last-position logits are bit-identical to a cold prefill
+        of prefix + suffix (DESIGN.md §4).  Returns (logits, caches).
+        """
+        logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
+                                        policy=policy, capacity=capacity,
+                                        prefill_mode="streaming", fused=fused,
+                                        start_pos=start_pos, init_caches=caches)
+        return logits, caches
+
     def decode_step(self, params, token_batch: dict, caches, pos,
                     policy: CompressionPolicy, capacity: int,
                     fused: str = "auto"):

@@ -234,19 +234,29 @@ def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
 
 def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
                          q_chunk, policy, batch, capacity, cache_dtype,
-                         fused: str, attn_impl: str):
+                         fused: str, attn_impl: str, cache=None,
+                         start_pos: int = 0):
     """Prefill block that builds its layer cache directly (streaming mode).
 
     Layers supporting the streaming pipeline project/attend/compress chunk
     by chunk (the full-sequence FP16 K/V never exists); window / softcap /
     prefix-LM / fp16 layers fall back to monolithic attention with the
-    batched compression event, inside the same unit body.  Returns
-    (x, aux, cache)."""
+    batched compression event, inside the same unit body.  Suffix prefill
+    (``start_pos`` > 0, ``cache`` pre-populated with the cached prefix
+    chunks) has no such fallback: every layer must take the streaming
+    pipeline, since only it can see the prefix in compressed form.
+    Returns (x, aux, cache)."""
     if kind == "rwkv":
+        if start_pos:
+            raise ValueError("suffix prefill cannot resume an RWKV state")
         return _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
                                   q_chunk, want_kv=True)
     ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
     if not attn_lib.streaming_prefill_supported(cfg, kind, ccfg):
+        if start_pos:
+            raise ValueError(
+                f"suffix prefill requires every layer to support the "
+                f"streaming pipeline (kind={kind!r} does not)")
         x, aux, kv = _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
                                         q_chunk, want_kv=True,
                                         attn_impl=attn_impl)
@@ -255,9 +265,11 @@ def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
     xin = apply_norm(x, bp["ln1"], cfg.norm)
     h, cache = attn_lib.attention_prefill_streaming(
         cfg, bp["attn"], xin, positions, kind, ccfg, fused=fused,
-        dtype=cache_dtype)
+        dtype=cache_dtype, cache=cache, start_pos=start_pos)
     ssm_state = None
     if cfg.ssm and cfg.hybrid_parallel:
+        if start_pos:
+            raise ValueError("suffix prefill cannot resume a hybrid SSM state")
         h2, ssm_state = ssm_lib.ssm_apply(cfg, bp["ssm"], xin)
         h = (h + h2) * 0.5
     x = x + h
@@ -298,11 +310,19 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
             remat: bool = False, remat_policy: str = "full",
             q_chunk_target: int = 512, cache_dtype=jnp.bfloat16,
             unroll_layers: bool = False, prefill_mode: str = "monolithic",
-            fused: str = "auto"):
+            fused: str = "auto", start_pos: int = 0, init_caches=None):
     """Full-sequence forward.
 
     mode="train": returns (logits, aux_loss)
     mode="prefill": returns (logits_last [B, 1, vocab...], caches, aux)
+
+    ``start_pos`` > 0 is the **suffix-offset prefill entry** (prefix
+    cache): ``batch`` holds only the tokens after a chunk-aligned cached
+    prefix, ``init_caches`` is the cache tree with the prefix chunks
+    already spliced in, positions are offset by ``start_pos``, and every
+    layer runs the streaming pipeline over the suffix with the cached
+    chunks visible as compressed history.  Requires
+    ``prefill_mode="streaming"`` and a model whose every layer supports it.
 
     ``prefill_mode`` selects the prefill pipeline: "monolithic" (full-seq
     attention, then one batched compression event per layer) or "streaming"
@@ -321,10 +341,12 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
     """
     x = embed_tokens(cfg, params, batch)
     B, S, _ = x.shape
-    positions = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.arange(start_pos, start_pos + S, dtype=jnp.int32)
     prefix_len = cfg.num_prefix_tokens if cfg.modality == "vlm" else 0
     q_chunk = pick_q_chunk(S, q_chunk_target)
     want_kv = mode == "prefill"
+    if start_pos and not (want_kv and prefill_mode == "streaming"):
+        raise ValueError("start_pos > 0 requires prefill_mode='streaming'")
     attn_impl = "chunked"
     if want_kv and fused == "interpret":
         attn_impl = "flash-interpret"
@@ -332,19 +354,25 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
         attn_impl = "flash"
 
     if want_kv and prefill_mode == "streaming":
-        def unit_body_stream(carry, unit_params):
+        def unit_body_stream(carry, xs):
+            unit_params, unit_caches = xs if init_caches is not None else (xs, None)
             x, aux = carry
             caches = []
             for i, kind in enumerate(cfg.layer_pattern):
                 x, a, c = _apply_block_prefill(
                     cfg, unit_params[i], x, kind, positions, prefix_len,
-                    q_chunk, policy, B, capacity, cache_dtype, fused, attn_impl)
+                    q_chunk, policy, B, capacity, cache_dtype, fused,
+                    attn_impl,
+                    cache=None if unit_caches is None else unit_caches[i],
+                    start_pos=start_pos)
                 aux = aux + a
                 caches.append(c)
             return (x, aux), tuple(caches)
 
+        scan_xs = (params["blocks"] if init_caches is None
+                   else (params["blocks"], init_caches))
         (x, aux), caches = jax.lax.scan(
-            unit_body_stream, (x, jnp.zeros((), jnp.float32)), params["blocks"],
+            unit_body_stream, (x, jnp.zeros((), jnp.float32)), scan_xs,
             unroll=cfg.pattern_repeats if unroll_layers else 1)
         x = apply_norm(x, params["final_norm"], cfg.norm)
         logits = logits_from_hidden(cfg, params, x[:, -1:, :])

@@ -1,0 +1,118 @@
+"""Radix-trie prefix cache over compressed GEAR chunks.
+
+Cross-request prefill reuse (vLLM automatic-prefix-caching / SGLang
+RadixAttention, adapted to the compressed cache): requests sharing a
+chunk-aligned prompt prefix reuse the prefix's *compressed* chunks instead
+of recomputing prefill attention + compression.  Because every
+``n_b``-token chunk is compressed as an independent, slot-invariant event
+(DESIGN.md §2), a cached chunk is bit-identical to the chunk the request
+would have computed itself — splicing from the cache adds **zero**
+approximation drift on top of GEAR's near-lossless recipe, and suffix
+prefill over the spliced prefix reproduces the cold run's cache and logits
+bit for bit (DESIGN.md §4).
+
+Layering:
+
+* :mod:`~repro.prefixcache.trie` — chunk-granular radix trie: longest-match
+  lookup, LRU eviction under a byte budget, refcount pinning, stats;
+* :mod:`~repro.prefixcache.store` — payload store + engine-tree
+  extraction/splicing built on the :mod:`repro.core.cache` chunk APIs;
+* :class:`PrefixCache` — the facade the serving engine drives
+  (:meth:`repro.serving.engine.Engine.prefill_slot`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.prefixcache.store import (ChunkStore, chunk_keys, payload_nbytes,
+                                     extract_tree_chunks, splice_tree_chunks)
+from repro.prefixcache.trie import RadixTrie, TrieNode, TrieStats
+
+__all__ = ["PrefixCache", "PrefixMatch", "RadixTrie", "TrieNode", "TrieStats",
+           "ChunkStore", "chunk_keys", "payload_nbytes",
+           "extract_tree_chunks", "splice_tree_chunks"]
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """A pinned longest-prefix hit: release via :meth:`PrefixCache.release`."""
+
+    nodes: list[TrieNode]
+    payloads: list            # one engine-tree chunk payload per matched chunk
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.nodes)
+
+
+class PrefixCache:
+    """Trie + store facade keyed on ``chunk``-token id chunks."""
+
+    def __init__(self, chunk: int, budget_bytes: int):
+        self.chunk = int(chunk)
+        self.trie = RadixTrie(budget_bytes)
+        self.store = ChunkStore()
+        self.toks_saved = 0
+
+    # ------------------------------------------------------------------
+    def match(self, tokens, max_chunks: int | None = None) -> PrefixMatch:
+        """Longest cached chunk-aligned prefix of ``tokens``.
+
+        Pins the matched path (the caller must :meth:`release` after
+        splicing) and accounts the reuse in ``toks_saved``.  ``max_chunks``
+        caps the match — the engine always leaves at least one suffix
+        token so prefill still produces last-position logits.
+        """
+        keys = chunk_keys(tokens, self.chunk)
+        if max_chunks is not None:
+            keys = keys[:max_chunks]
+        nodes = self.trie.lookup(keys, acquire=True)
+        self.toks_saved += len(nodes) * self.chunk
+        return PrefixMatch(nodes=nodes,
+                           payloads=[self.store.get(nd.handle) for nd in nodes])
+
+    def release(self, match: PrefixMatch) -> None:
+        self.trie.release(match.nodes)
+
+    def insert(self, tokens, payloads, start_chunk: int = 0) -> int:
+        """Cache ``payloads`` as chunks ``[start_chunk, ...)`` of ``tokens``.
+
+        The first ``start_chunk`` chunks must already be cached (the warm
+        request's matched — still pinned — prefix).  Duplicate chunks (a
+        racing insert) and any LRU evictions are freed from the store.
+        Returns the number of nodes created.
+        """
+        keys = chunk_keys(tokens, self.chunk)[:start_chunk + len(payloads)]
+        entries = ([None] * start_chunk
+                   + [(self.store.put(p), payload_nbytes(p)) for p in payloads])
+        created, unused, evicted = self.trie.insert(keys, entries)
+        for handle in unused:
+            self.store.free(handle)
+        for handle in evicted:
+            self.store.free(handle)
+        return len(created)
+
+    def clear(self) -> None:
+        """Drop all cached chunks (keeps budget and stats counters)."""
+        for handle in self.trie.clear():
+            self.store.free(handle)
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        st = self.trie.stats
+        return {
+            "prefix_hit_rate": st.prefix_hit_rate,
+            "prefill_toks_saved": self.toks_saved,
+            "lookups": st.lookups,
+            "hits": st.hits,
+            "misses": st.misses,
+            "hit_chunks": st.hit_chunks,
+            "lookup_chunks": st.lookup_chunks,
+            "inserts": st.inserts,
+            "evictions": st.evictions,
+            "nodes": self.trie.n_nodes,
+            "bytes": self.trie.total_bytes,
+            "budget_bytes": self.trie.budget_bytes,
+        }

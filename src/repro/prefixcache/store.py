@@ -1,0 +1,96 @@
+"""Compressed-chunk store + engine-tree chunk extraction/splicing.
+
+A chunk **payload** is everything needed to reproduce one ``n_b``-token
+GEAR chunk in any slot of any same-geometry cache: a tuple over the
+model's pattern positions of per-layer field dicts (packed quant codes,
+per-chunk quant stats, low-rank factors, outliers — see
+:func:`repro.core.cache.extract_prefix_chunks`).  Payload leaves are
+device arrays extracted straight from a batch-1 prefill's cache tree, so a
+hit is spliced back with plain ``dynamic_update_slice`` writes and zero
+recompression.
+
+:class:`ChunkStore` owns the payloads behind opaque integer handles (the
+radix trie stores only handles + byte sizes) and does exact byte
+accounting — the number the trie's LRU budget governs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core import cache as cache_lib
+
+__all__ = ["ChunkStore", "chunk_keys", "payload_nbytes",
+           "extract_tree_chunks", "splice_tree_chunks"]
+
+
+def chunk_keys(tokens, chunk: int) -> list[tuple[int, ...]]:
+    """Trie edge labels for a prompt: its full ``chunk``-token chunks."""
+    toks = [int(t) for t in tokens]
+    n_full = len(toks) // chunk
+    return [tuple(toks[c * chunk:(c + 1) * chunk]) for c in range(n_full)]
+
+
+def payload_nbytes(payload) -> int:
+    """Exact device bytes of one chunk payload."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(payload))
+
+
+class ChunkStore:
+    """Handle-addressed payload store with exact byte accounting."""
+
+    def __init__(self):
+        self._entries: dict[int, tuple[Any, int]] = {}
+        self._next_handle = 0
+        self.total_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, payload) -> int:
+        handle = self._next_handle
+        self._next_handle += 1
+        nbytes = payload_nbytes(payload)
+        self._entries[handle] = (payload, nbytes)
+        self.total_bytes += nbytes
+        return handle
+
+    def get(self, handle: int):
+        return self._entries[handle][0]
+
+    def free(self, handle: int) -> None:
+        _, nbytes = self._entries.pop(handle)
+        self.total_bytes -= nbytes
+
+
+# ---------------------------------------------------------------------------
+# Engine cache tree <-> per-chunk payloads
+
+
+def extract_tree_chunks(cache_cfgs, caches, c_lo: int, c_hi: int) -> list:
+    """Slice chunks ``[c_lo, c_hi)`` out of an engine cache tree.
+
+    ``caches`` is the engine layout — a tuple over pattern positions of
+    layer caches with repeat-stacked ``[R, B, ...]`` leaves (a batch-1
+    prefill result in practice); ``cache_cfgs`` the matching per-position
+    :class:`~repro.core.cache.CacheConfig` list.  Returns one payload per
+    chunk: a tuple over positions of that chunk's field dicts.
+    """
+    per_pos = [cache_lib.extract_prefix_chunks(cfg, layer, c_hi - c_lo, c_lo)
+               for cfg, layer in zip(cache_cfgs, caches)]
+    return [tuple(chunks[c] for chunks in per_pos) for c in range(c_hi - c_lo)]
+
+
+def splice_tree_chunks(cache_cfgs, caches, slot, payloads,
+                       start_chunk: int = 0, batch_axis: int = 1):
+    """Write per-chunk payloads into batch row ``slot`` of an engine cache
+    tree as chunks ``[start_chunk, start_chunk + len(payloads))`` — the
+    prefix-cache half of the slot-splice protocol (DESIGN.md §4)."""
+    out = []
+    for i, (cfg, layer) in enumerate(zip(cache_cfgs, caches)):
+        out.append(cache_lib.splice_prefix_chunks(
+            cfg, layer, slot, [p[i] for p in payloads], start_chunk,
+            batch_axis=batch_axis))
+    return tuple(out)

@@ -1,0 +1,213 @@
+"""Chunk-granular radix trie for cross-request prefix matching.
+
+The trie is keyed on ``n_b``-aligned token-id chunks: every edge is one
+whole chunk (a tuple of ``n_b`` token ids), so a root-to-node path spells a
+chunk-aligned prompt prefix and each node owns exactly one compressed-chunk
+payload (held in :class:`repro.prefixcache.store.ChunkStore`; the trie only
+sees an opaque ``handle`` plus its byte size).  Chunk granularity is what
+makes cached state spliceable: GEAR compresses each ``n_b``-token chunk as
+an independent, slot-invariant event, so a chunk-aligned prefix has
+bit-identical compressed form no matter which request computed it — a
+finer-grained (per-token) trie would name state the cache layout cannot
+reproduce.
+
+Eviction is LRU over *evictable leaves* under a byte budget: a node can be
+evicted only when it has no children (an interior node is the prefix of a
+longer cached path — dropping it would orphan descendants) and no live
+references.  Callers pin a matched path with ``lookup(acquire=True)`` while
+they splice its payloads and must :meth:`RadixTrie.release` it afterwards;
+referenced nodes are never evicted, so the budget is a soft bound while
+pins are outstanding and a hard bound otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Hashable, Iterable, Sequence
+
+__all__ = ["RadixTrie", "TrieNode", "TrieStats"]
+
+
+@dataclasses.dataclass
+class TrieStats:
+    """Monotonic counters; rates are derived properties."""
+
+    lookups: int = 0        # lookup() calls
+    hits: int = 0           # lookups matching >= 1 chunk
+    misses: int = 0         # lookups matching 0 chunks
+    hit_chunks: int = 0     # chunks served across all lookups
+    lookup_chunks: int = 0  # chunks eligible across all lookups
+    inserts: int = 0        # nodes created
+    evictions: int = 0      # nodes evicted
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of eligible prompt chunks served from the trie."""
+        return self.hit_chunks / max(self.lookup_chunks, 1)
+
+
+class TrieNode:
+    """One cached chunk: edge label ``key`` + opaque payload ``handle``."""
+
+    __slots__ = ("key", "parent", "children", "handle", "nbytes", "refs",
+                 "last_use")
+
+    def __init__(self, key: Hashable, parent: "TrieNode | None",
+                 handle: Any = None, nbytes: int = 0):
+        self.key = key
+        self.parent = parent
+        self.children: dict[Hashable, TrieNode] = {}
+        self.handle = handle
+        self.nbytes = int(nbytes)
+        self.refs = 0
+        self.last_use = 0
+
+
+class RadixTrie:
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self.root = TrieNode(key=None, parent=None)
+        self.total_bytes = 0
+        self.n_nodes = 0
+        self.stats = TrieStats()
+        self._clock = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ------------------------------------------------------------------
+    def lookup(self, chunk_keys: Sequence[Hashable],
+               acquire: bool = False) -> list[TrieNode]:
+        """Longest chunk-aligned prefix match.
+
+        Returns the node path for the longest prefix of ``chunk_keys``
+        present in the trie (empty list on a total miss) and bumps every
+        matched node's LRU recency.  ``acquire=True`` additionally pins
+        each node on the path (refcount +1) so eviction cannot free a
+        payload the caller is about to splice; the caller must
+        :meth:`release` the same list when done.
+        """
+        self.stats.lookups += 1
+        self.stats.lookup_chunks += len(chunk_keys)
+        t = self._tick()
+        node, path = self.root, []
+        for key in chunk_keys:
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_use = t
+            path.append(child)
+            node = child
+        if acquire:
+            for nd in path:
+                nd.refs += 1
+        self.stats.hit_chunks += len(path)
+        if path:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+        return path
+
+    def release(self, nodes: Iterable[TrieNode]) -> None:
+        """Unpin nodes previously acquired by ``lookup(acquire=True)``."""
+        for nd in nodes:
+            if nd.refs <= 0:
+                raise ValueError("release without matching acquire")
+            nd.refs -= 1
+
+    # ------------------------------------------------------------------
+    def insert(self, chunk_keys: Sequence[Hashable],
+               entries: Sequence[tuple[Any, int] | None]):
+        """Insert/extend one chunk path.
+
+        ``entries[i]`` is ``(handle, nbytes)`` for chunk ``i``, or None when
+        the caller expects the node to already exist (e.g. the matched
+        prefix of a warm request).  Walks the path, creating nodes where
+        missing; stops early if a node is missing but its entry is None.
+        Returns ``(created, unused_handles, evicted_handles)``: handles the
+        trie did not take ownership of (a racing insert already cached that
+        chunk) plus handles freed by the post-insert eviction pass — the
+        caller must free both sets in its payload store.
+        """
+        if len(entries) != len(chunk_keys):
+            raise ValueError(f"{len(entries)} entries for {len(chunk_keys)} keys")
+        t = self._tick()
+        node = self.root
+        created: list[TrieNode] = []
+        unused: list[Any] = []
+        for i, (key, entry) in enumerate(zip(chunk_keys, entries)):
+            child = node.children.get(key)
+            if child is None:
+                if entry is None:
+                    # cannot extend past a missing unbacked node; hand every
+                    # remaining provided handle back so the caller's store
+                    # does not leak the orphaned payloads
+                    unused.extend(e[0] for e in entries[i:] if e is not None)
+                    break
+                handle, nbytes = entry
+                child = TrieNode(key, node, handle, nbytes)
+                node.children[key] = child
+                self.total_bytes += child.nbytes
+                self.n_nodes += 1
+                self.stats.inserts += 1
+                created.append(child)
+            elif entry is not None:
+                unused.append(entry[0])
+            child.last_use = t
+            node = child
+        return created, unused, self.evict_to_budget()
+
+    # ------------------------------------------------------------------
+    def _evictable_leaves(self) -> list[TrieNode]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            if nd.children:
+                stack.extend(nd.children.values())
+            elif nd.refs == 0:
+                out.append(nd)
+        return out
+
+    def evict_to_budget(self) -> list[Any]:
+        """Evict LRU evictable leaves until within budget.
+
+        Returns the payload handles freed (for the caller's store).  May
+        leave the trie above budget when every remaining leaf is pinned —
+        referenced nodes are never evicted.  One trie walk seeds a heap of
+        evictable leaves; a victim's parent joins the heap the moment it
+        becomes a childless unpinned leaf, so an eviction burst is
+        O(nodes log nodes), not a full re-walk per victim.
+        """
+        evicted: list[Any] = []
+        if self.total_bytes <= self.budget_bytes:
+            return evicted
+        heap = [(nd.last_use, id(nd), nd) for nd in self._evictable_leaves()]
+        heapq.heapify(heap)
+        while self.total_bytes > self.budget_bytes and heap:
+            _, _, victim = heapq.heappop(heap)
+            del victim.parent.children[victim.key]
+            self.total_bytes -= victim.nbytes
+            self.n_nodes -= 1
+            self.stats.evictions += 1
+            evicted.append(victim.handle)
+            parent = victim.parent
+            if (parent is not self.root and not parent.children
+                    and parent.refs == 0):
+                heapq.heappush(heap, (parent.last_use, id(parent), parent))
+        return evicted
+
+    def clear(self) -> list[Any]:
+        """Drop every node (ignores pins — callers must hold none).
+        Returns all payload handles for the caller's store."""
+        handles = []
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            handles.append(nd.handle)
+            stack.extend(nd.children.values())
+        self.root.children.clear()
+        self.total_bytes = 0
+        self.n_nodes = 0
+        return handles

@@ -26,11 +26,14 @@ from repro.core import cache as cache_lib
 from repro.core.policy import CompressionPolicy
 from repro.dist import sharding as shd
 from repro.kernels import ops as kernel_ops
+from repro.models import attention as attn_lib
 from repro.models.model import Model
 from repro.models.transformer import cache_cfg_for
+from repro.prefixcache import PrefixCache
+from repro.prefixcache import store as pc_store
 from repro.serving.sampling import sample
 
-__all__ = ["EngineConfig", "Engine"]
+__all__ = ["EngineConfig", "Engine", "prefix_cache_unsupported_reason"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +56,15 @@ class EngineConfig:
     # pipeline — peak prefill memory is the compressed cache plus one chunk
     # instead of the full FP16 history; both build bit-identical caches).
     prefill_mode: str = "monolithic"
+    # Cross-request prefix cache (radix trie over compressed GEAR chunks,
+    # repro.prefixcache): prefill_slot splices the longest cached
+    # chunk-aligned prompt prefix into the slot and streams only the
+    # suffix — bit-identical caches/logits vs a cold prefill.  Requires
+    # prefill_mode="streaming" (the hit path attends the cached prefix in
+    # compressed form, which is exactly streaming's numeric model) and a
+    # model whose every layer supports the streaming pipeline.
+    prefix_cache: bool = False
+    prefix_cache_bytes: int = 256 << 20   # trie LRU byte budget
 
     def __post_init__(self):
         if self.fused not in ("auto", "interpret", "off"):
@@ -60,6 +72,38 @@ class EngineConfig:
         if self.prefill_mode not in ("monolithic", "streaming"):
             raise ValueError(
                 f"prefill_mode must be monolithic/streaming, got {self.prefill_mode!r}")
+        if self.prefix_cache and self.prefill_mode != "streaming":
+            raise ValueError(
+                "prefix_cache requires prefill_mode='streaming': the hit "
+                "path attends the cached prefix in compressed form, so only "
+                "streaming cold prefills are bit-identical to warm ones")
+
+
+def prefix_cache_unsupported_reason(cfg, policy: CompressionPolicy,
+                                    capacity: int) -> str | None:
+    """Why this model/policy cannot take the prefix cache (None = it can).
+
+    The hit path replays a cached chunk-aligned prefix as compressed
+    history under the streaming suffix pipeline, so every layer must (a)
+    keep all its prefill state in spliceable GEAR chunks and (b) support
+    streaming prefill.  RWKV / hybrid-SSM recurrent states and the VLM
+    bidirectional image prefix are neither; fp16 policies have no
+    compressed chunks to cache.
+    """
+    if policy.is_fp16:
+        return "fp16 policy has no compressed chunks to cache"
+    if cfg.modality != "text":
+        return f"modality {cfg.modality!r} (prompt is not a flat token-id sequence)"
+    if cfg.ssm and cfg.hybrid_parallel:
+        return "hybrid SSM state is not chunk-decomposable"
+    for kind in cfg.layer_pattern:
+        if kind == "rwkv":
+            return "rwkv layers carry recurrent state, not spliceable chunks"
+        ccfg = cache_cfg_for(cfg, kind, policy, 1, capacity)
+        if not attn_lib.streaming_prefill_supported(cfg, kind, ccfg):
+            return (f"layer kind {kind!r} does not support the streaming "
+                    "prefill pipeline")
+    return None
 
 
 class Engine:
@@ -110,6 +154,28 @@ class Engine:
             if ecfg.batch == 1 else self._splice)  # identical program otherwise
         self._fresh1 = None  # lazily-built batch-1 empty cache (for reset_slot)
 
+        self.prefix_cache = None
+        if ecfg.prefix_cache:
+            reason = prefix_cache_unsupported_reason(self.cfg, ecfg.policy, cap)
+            if reason is not None:
+                raise ValueError(f"prefix_cache unsupported here: {reason}")
+            self.prefix_cache = PrefixCache(ecfg.policy.buffer_size,
+                                            ecfg.prefix_cache_bytes)
+            self._cache_cfgs = [cache_cfg_for(self.cfg, kind, ecfg.policy, 1, cap)
+                                for kind in self.cfg.layer_pattern]
+            # per-shape jitted programs for the hit path, keyed by the
+            # cached-prefix chunk count (suffix prefill) and extraction
+            # chunk range — padded prompts mean only a handful of shapes
+            # ever occur; jitting them matters because the eager versions
+            # pay one dispatch per cache field per chunk.  The scaffold
+            # splice needs no key: its trace depends only on the payload
+            # pytree structure, which jit re-specializes on by itself.
+            self._suffix_fns: dict[int, Any] = {}
+            self._extract_fns: dict[tuple[int, int], Any] = {}
+            self._splice_prefix = jax.jit(
+                lambda fresh, payloads: pc_store.splice_tree_chunks(
+                    self._cache_cfgs, fresh, 0, payloads))
+
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
         return (self.ecfg.capacity + nb - 1) // nb * nb
@@ -144,7 +210,7 @@ class Engine:
                             jnp.asarray(pos, jnp.int32))
 
     # -- slot-level continuous batching --------------------------------
-    def prefill_slot(self, batch1: dict, caches, slot: int):
+    def prefill_slot(self, batch1: dict, caches, slot: int, admit: bool = True):
         """Prefill ONE request (batch-1 inputs) and splice it into ``slot``.
 
         Returns (logits [1, 1, ...] for the request's last prompt position,
@@ -156,16 +222,86 @@ class Engine:
         ``prefill_mode="streaming"`` the batch-1 prefill never materializes
         the prompt's FP16 K/V, so long-prompt splices stay within the
         compressed-cache memory budget.
+
+        With ``EngineConfig.prefix_cache`` on, the trie is consulted first:
+        the longest cached chunk-aligned prefix of the (padded) prompt is
+        spliced straight into a batch-1 cache tree and only the remaining
+        suffix runs streaming prefill, with the prefix visible as
+        already-compressed history — bit-identical caches and logits vs the
+        cold path (DESIGN.md §4).  ``admit`` is the scheduler's admission
+        policy: when True the prompt's newly closed chunks are inserted
+        back into the trie after prefill.
         """
-        logits, one = self._prefill(self.params, batch1)
+        if self.prefix_cache is None:
+            logits, one = self._prefill(self.params, batch1)
+            return logits, self._splice_donate_one(caches, one,
+                                                   jnp.asarray(slot, jnp.int32))
+        tokens = np.asarray(batch1["tokens"][0])
+        nb = self.ecfg.policy.buffer_size
+        n = tokens.shape[0]
+        # always leave >= 1 suffix token so prefill computes the
+        # last-position logits the first sampled token comes from
+        match = self.prefix_cache.match(tokens, max_chunks=max((n - 1) // nb, 0))
+        n_hit = match.n_chunks
+        try:
+            if n_hit:
+                one1 = self._splice_prefix(self._fresh_batch1(),
+                                           match.payloads)
+                suffix = {"tokens": jnp.asarray(tokens[None, n_hit * nb:],
+                                                jnp.int32)}
+                logits, one = self._suffix_fn(n_hit)(self.params, suffix, one1)
+            else:
+                logits, one = self._prefill(self.params, batch1)
+            if admit and n // nb > n_hit:
+                payloads = self._extract_fn(n_hit, n // nb)(one)
+                self.prefix_cache.insert(tokens, payloads, start_chunk=n_hit)
+        finally:
+            self.prefix_cache.release(match)
         return logits, self._splice_donate_one(caches, one,
                                                jnp.asarray(slot, jnp.int32))
 
-    def reset_slot(self, caches, slot: int):
-        """Return ``caches`` with batch row ``slot`` cleared to empty state."""
+    def _fresh_batch1(self):
+        """Memoized empty batch-1 cache tree (read-only — splices copy out
+        of it; never donate it into a jitted program)."""
         if self._fresh1 is None:
             self._fresh1 = self.model.init_caches(self.ecfg.policy, 1, self._cap())
-        return self._splice(caches, self._fresh1, jnp.asarray(slot, jnp.int32))
+        return self._fresh1
+
+    def _suffix_fn(self, n_pre_chunks: int):
+        """Jitted suffix prefill for a ``n_pre_chunks``-chunk cached prefix.
+
+        The prefix length is static (it fixes every array shape in the
+        suffix pipeline), so programs are compiled per distinct chunk
+        count.  The scaffold tree is NOT donated: the streaming store path
+        assembles each cache array from the stacked compression-scan
+        outputs, so XLA cannot alias any input leaf into its output (every
+        leaf would trip the unusable-donation warning) — and the
+        un-donated scaffold may alias the memoized ``_fresh_batch1`` tree's
+        buffer/length leaves safely.
+        """
+        fn = self._suffix_fns.get(n_pre_chunks)
+        if fn is None:
+            start = n_pre_chunks * self.ecfg.policy.buffer_size
+            fn = jax.jit(
+                lambda p, b, c1: self.model.prefill_suffix(
+                    p, b, c1, start, self.ecfg.policy, self._cap(),
+                    fused=self.ecfg.fused))
+            self._suffix_fns[n_pre_chunks] = fn
+        return fn
+
+    def _extract_fn(self, c_lo: int, c_hi: int):
+        """Jitted chunk extraction from a batch-1 cache tree."""
+        fn = self._extract_fns.get((c_lo, c_hi))
+        if fn is None:
+            fn = jax.jit(lambda caches: pc_store.extract_tree_chunks(
+                self._cache_cfgs, caches, c_lo, c_hi))
+            self._extract_fns[(c_lo, c_hi)] = fn
+        return fn
+
+    def reset_slot(self, caches, slot: int):
+        """Return ``caches`` with batch row ``slot`` cleared to empty state."""
+        return self._splice(caches, self._fresh_batch1(),
+                            jnp.asarray(slot, jnp.int32))
 
     # ------------------------------------------------------------------
     def generate(self, batch: dict, max_new_tokens: int, key=None, active=None):

@@ -21,7 +21,19 @@ Two scheduling modes over the engine's static batch of B *slots*:
   which path the engine compiled.
 
 Both modes trim each request's results at its own first EOS and report
-per-request prefill/decode latency.
+per-request prefill/decode latency.  When the engine has a prefix cache
+(``EngineConfig.prefix_cache``), continuous mode threads the scheduler's
+admission policy into every slot prefill and reports ``prefix_hit_rate`` /
+``prefill_toks_saved`` in ``last_stats``.
+
+**Prefix cache vs left-padding.**  Prompts are LEFT-padded to
+``prompt_pad`` before prefill, and the trie keys on the *padded* token
+sequence — so only requests whose raw prompts have the same length see
+each other's chunks (different pad widths shift every chunk boundary).
+Shared-system-prompt workloads should therefore pad user suffixes to a
+common length (as the shipped demos/benches do); unpadded or
+length-bucketed scheduling that aligns raw prompts is an open item
+(ROADMAP).
 """
 
 from __future__ import annotations
@@ -56,9 +68,19 @@ class Result:
 
 
 class Scheduler:
-    def __init__(self, engine: Engine, prompt_pad: int):
+    def __init__(self, engine: Engine, prompt_pad: int,
+                 prefix_admission: str = "all"):
+        """``prefix_admission`` is the prefix-cache admission policy threaded
+        to :meth:`Engine.prefill_slot` when the engine has a prefix cache:
+        "all" inserts every request's newly closed prompt chunks into the
+        trie; "off" reuses cached prefixes but admits nothing new (e.g. a
+        bursty one-off workload that would churn the LRU budget)."""
+        if prefix_admission not in ("all", "off"):
+            raise ValueError(
+                f"prefix_admission must be all/off, got {prefix_admission!r}")
         self.engine = engine
         self.prompt_pad = prompt_pad
+        self.prefix_admission = prefix_admission
         self.queue: deque[Request] = deque()
         self.last_stats: dict = {}
 
@@ -128,6 +150,9 @@ class Scheduler:
         key = jax.random.PRNGKey(0)
 
         results: list[Result] = []
+        # engine prefix-cache counters are lifetime-cumulative; snapshot so
+        # last_stats reports THIS run's rates, like every other field in it
+        pstats0 = eng.prefix_cache.stats if eng.prefix_cache is not None else None
         caches = eng.init_caches()
         pos = np.zeros(B, np.int32)        # per-slot absolute decode position
         budget = np.zeros(B, np.int32)     # per-slot remaining-token budget
@@ -158,7 +183,8 @@ class Scheduler:
             prompt = _pad(r.tokens, self.prompt_pad)[None]
             t0 = time.time()
             logits, caches = eng.prefill_slot(
-                {"tokens": jnp.asarray(prompt, jnp.int32)}, caches, s)
+                {"tokens": jnp.asarray(prompt, jnp.int32)}, caches, s,
+                admit=self.prefix_admission == "all")
             first = int(np.asarray(
                 sample(logits[:, -1], key, eng.ecfg.temperature, eng.ecfg.top_k))[0])
             prefill_s[s] = time.time() - t0
@@ -212,6 +238,15 @@ class Scheduler:
             "tokens": int(sum(len(r.tokens) for r in results)),
             "attend_path": eng.attend_path,
         }
+        if pstats0 is not None:
+            pstats = eng.prefix_cache.stats
+            hit = pstats["hit_chunks"] - pstats0["hit_chunks"]
+            look = pstats["lookup_chunks"] - pstats0["lookup_chunks"]
+            self.last_stats["prefix_hit_rate"] = hit / max(look, 1)
+            self.last_stats["prefill_toks_saved"] = (
+                pstats["prefill_toks_saved"] - pstats0["prefill_toks_saved"])
+            self.last_stats["prefix_evictions"] = (
+                pstats["evictions"] - pstats0["evictions"])
         return results
 
 

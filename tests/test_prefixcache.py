@@ -1,0 +1,411 @@
+"""Radix-trie prefix cache: trie invariants, chunk extract/splice round
+trips, and the archetype guarantee — splice-from-cache ≡ recompute-from-
+scratch, bit for bit (caches, logits, and greedy decode tokens).
+
+The trie tests exercise the structure standalone (longest-match
+correctness, LRU eviction under a byte budget, refcount pinning), plus a
+hypothesis property over arbitrary interleavings of insert / lookup /
+acquire / release.  The engine tests pin that a warm request sharing a
+>= 2-chunk prefix is indistinguishable from a cold run — GEAR's
+chunk-independent, slot-invariant compression is what makes the cache
+lossless (DESIGN.md §4).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.core.policy import FP16, named_policy
+from repro.models.model import build_model
+from repro.prefixcache import PrefixCache, RadixTrie
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Request, Scheduler
+
+GEAR_POL = dataclasses.replace(named_policy("gear_kcvt4"),
+                               buffer_size=8, rank=2, rank_decode=2)
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                   num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                   vocab_size=64)
+NB = GEAR_POL.buffer_size
+EOS = 3
+PROMPT_PAD = 32
+
+
+# ---------------------------------------------------------------------------
+# Trie unit tests
+
+
+def _keys(*tokens_per_chunk):
+    return [tuple(c) for c in tokens_per_chunk]
+
+
+def _entry(nbytes=10, handle=None):
+    return (object() if handle is None else handle, nbytes)
+
+
+def test_trie_longest_match_and_stats():
+    trie = RadixTrie(budget_bytes=1 << 20)
+    path = _keys([1, 2], [3, 4], [5, 6])
+    trie.insert(path, [_entry() for _ in path])
+    assert len(trie.lookup(path)) == 3
+    assert len(trie.lookup(path[:2])) == 2
+    assert len(trie.lookup(_keys([1, 2], [9, 9]))) == 1   # diverges at chunk 1
+    assert trie.lookup(_keys([7, 7])) == []
+    st = trie.stats
+    assert (st.lookups, st.hits, st.misses) == (4, 3, 1)
+    assert st.hit_chunks == 6 and st.lookup_chunks == 8
+    assert st.prefix_hit_rate == pytest.approx(6 / 8)
+
+
+def test_trie_shared_prefix_not_duplicated():
+    trie = RadixTrie(budget_bytes=1 << 20)
+    trie.insert(_keys([1], [2]), [_entry(), _entry()])
+    created, unused, _ = trie.insert(_keys([1], [3]),
+                                     [_entry(handle="dup"), _entry()])
+    assert len(created) == 1 and unused == ["dup"]   # chunk [1] already cached
+    assert trie.n_nodes == 3
+
+
+def test_trie_insert_past_missing_node_returns_orphan_handles():
+    """Entries after an un-backed gap are handed back, never leaked."""
+    trie = RadixTrie(budget_bytes=1 << 20)
+    created, unused, _ = trie.insert(
+        _keys([1], [2], [3]), [None, _entry(handle="x"), _entry(handle="y")])
+    assert created == [] and unused == ["x", "y"] and trie.n_nodes == 0
+
+
+def test_trie_lru_eviction_order_and_budget():
+    trie = RadixTrie(budget_bytes=20)                 # fits two 10-byte chunks
+    trie.insert(_keys([1]), [_entry(handle="a")])
+    trie.insert(_keys([2]), [_entry(handle="b")])
+    trie.lookup(_keys([1]))                           # bump "a": "b" is now LRU
+    _, _, evicted = trie.insert(_keys([3]), [_entry(handle="c")])
+    assert evicted == ["b"]
+    assert trie.total_bytes <= trie.budget_bytes
+    assert len(trie.lookup(_keys([1]))) == 1 and len(trie.lookup(_keys([3]))) == 1
+
+
+def test_trie_interior_nodes_survive_leaf_eviction():
+    """A node with children is never evicted before its descendants."""
+    trie = RadixTrie(budget_bytes=1 << 20)
+    trie.insert(_keys([1], [2], [3]), [_entry(10, h) for h in "abc"])
+    trie.budget_bytes = 15                            # must drop to one node
+    evicted = trie.evict_to_budget()
+    assert evicted == ["c", "b"]                      # deepest-first, never "a" first
+    assert len(trie.lookup(_keys([1], [2], [3]))) == 1
+
+
+def test_trie_refcounted_nodes_never_evicted():
+    trie = RadixTrie(budget_bytes=1 << 20)
+    trie.insert(_keys([1], [2]), [_entry(10, "a"), _entry(10, "b")])
+    pinned = trie.lookup(_keys([1], [2]), acquire=True)
+    trie.budget_bytes = 0
+    assert trie.evict_to_budget() == []               # everything pinned
+    assert trie.total_bytes == 20                     # soft bound while pinned
+    trie.release(pinned)
+    assert set(trie.evict_to_budget()) == {"a", "b"}
+    assert trie.total_bytes == 0
+    with pytest.raises(ValueError):
+        trie.release(pinned)                          # double release
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: arbitrary interleavings preserve the invariants
+
+
+def _facade_invariants(pc: PrefixCache, held):
+    trie = pc.trie
+    # byte/node accounting: trie totals == walked totals == store totals
+    walked_bytes, walked_nodes = 0, 0
+    stack = list(trie.root.children.values())
+    while stack:
+        nd = stack.pop()
+        walked_bytes += nd.nbytes
+        walked_nodes += 1
+        stack.extend(nd.children.values())
+    assert trie.total_bytes == walked_bytes == pc.store.total_bytes
+    assert trie.n_nodes == walked_nodes == len(pc.store)
+    # every pinned node is still attached (never evicted while referenced)
+    for match in held:
+        for nd in match.nodes:
+            assert nd.parent.children.get(nd.key) is nd
+    # budget is a hard bound whenever nothing is pinned
+    if not held:
+        assert trie.total_bytes <= trie.budget_bytes
+
+
+def _maximal_match(pc: PrefixCache, tokens):
+    from repro.prefixcache import chunk_keys
+    keys = chunk_keys(tokens, pc.chunk)
+    path = pc.trie.lookup(keys)
+    # longest-match: the path matches the query and cannot be extended
+    for nd, key in zip(path, keys):
+        assert nd.key == key
+    if len(path) < len(keys):
+        tip = path[-1] if path else pc.trie.root
+        assert keys[len(path)] not in tip.children
+
+
+def test_trie_property_interleavings():
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed; CI's full lane installs it via "
+               "`pip install -e .[test]`")
+    from hypothesis import given, settings, strategies as st, HealthCheck
+
+    chunk = 2
+    tokens_strat = st.lists(st.integers(0, 2), min_size=0, max_size=10)
+    op = st.one_of(
+        st.tuples(st.just("insert"), tokens_strat, st.integers(1, 40)),
+        st.tuples(st.just("lookup"), tokens_strat, st.just(0)),
+        st.tuples(st.just("acquire"), tokens_strat, st.just(0)),
+        st.tuples(st.just("release"), st.just(None), st.integers(0, 5)),
+    )
+
+    @given(budget=st.integers(0, 200), ops=st.lists(op, max_size=40))
+    @settings(max_examples=50, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def run(budget, ops):
+        pc = PrefixCache(chunk=chunk, budget_bytes=budget)
+        held = []
+        for kind, tokens, arg in ops:
+            if kind == "insert":
+                n_full = len(tokens) // chunk
+                payloads = [np.zeros(arg, np.uint8) for _ in range(n_full)]
+                pc.insert(tokens, payloads)
+            elif kind == "lookup":
+                _maximal_match(pc, tokens)
+            elif kind == "acquire":
+                held.append(pc.match(tokens))
+            elif kind == "release" and held:
+                pc.release(held.pop(arg % len(held)))
+            _facade_invariants(pc, held)
+        while held:
+            pc.release(held.pop())
+        pc.trie.evict_to_budget()
+        _facade_invariants(pc, held)
+        assert pc.trie.total_bytes <= budget
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Chunk extract/splice round trip (core APIs)
+
+
+@pytest.mark.parametrize("policy_name", ["gear_kcvt4", "gear_kivi2", "kcvt4"])
+def test_extract_splice_roundtrip(policy_name):
+    """extract_prefix_chunks -> splice_prefix_chunks reproduces the chunk
+    rows of the source cache exactly, into any slot of a wider cache."""
+    pol = dataclasses.replace(named_policy(policy_name), buffer_size=8,
+                              rank=2, rank_decode=2,
+                              group=4 if "kivi" in policy_name else 64)
+    cfg = cache_lib.CacheConfig(batch=1, kv_heads=2, head_dim=16,
+                                capacity=32, policy=pol)
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (1, 2, 24, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 24, 16))
+    src = cache_lib.prefill_layer_cache(cfg, cache_lib.init_layer_cache(cfg), k, v)
+
+    chunks = cache_lib.extract_prefix_chunks(cfg, src, 2)
+    cfg3 = dataclasses.replace(cfg, batch=3)
+    dst = cache_lib.splice_prefix_chunks(
+        cfg3, cache_lib.init_layer_cache(cfg3), 2, chunks)
+    spec = cache_lib._chunk_row_axes(cfg)
+    for field, (rpc, ax) in spec.items():
+        a = np.asarray(getattr(src, field))
+        b = np.asarray(getattr(dst, field))[2:3]
+        sl = [slice(None)] * a.ndim
+        sl[a.ndim + ax] = slice(0, 2 * rpc)
+        np.testing.assert_array_equal(a[tuple(sl)], b[tuple(sl)], err_msg=field)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: warm ≡ cold, bit for bit
+
+
+_ENGINES: dict = {}
+
+
+def _engines():
+    """(cold, warm, warm-tiny-budget) engines over shared tiny params."""
+    if not _ENGINES:
+        model = build_model(TINY)
+        params = model.init(jax.random.PRNGKey(0))
+        base = EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                            prefill_mode="streaming", eos_id=EOS)
+        _ENGINES["model"] = (model, params)
+        _ENGINES["cold"] = Engine(model, params, base)
+        _ENGINES["warm"] = Engine(model, params,
+                                  dataclasses.replace(base, prefix_cache=True))
+    return _ENGINES["cold"], _ENGINES["warm"]
+
+
+def _prompts(shared_chunks=3, n=2, seed=0):
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(4, TINY.vocab_size, size=shared_chunks * NB)
+    return [np.concatenate([shared,
+                            rng.randint(4, TINY.vocab_size, size=PROMPT_PAD
+                                        - shared.size)])
+            for _ in range(n)]
+
+
+def _slot_leaves(caches, slot):
+    return [np.asarray(x)[:, slot] for x in jax.tree.leaves(caches)]
+
+
+def test_warm_prefill_bit_identical_to_cold():
+    """The acceptance criterion: a second request sharing a >= 2-chunk
+    prefix produces bit-identical per-slot caches and logits vs cold."""
+    cold, warm = _engines()
+    pa, pb = _prompts(shared_chunks=3)
+    cc, wc = cold.init_caches(), warm.init_caches()
+    for slot, prompt in ((0, pa), (1, pb)):
+        batch1 = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+        lc, cc = cold.prefill_slot(batch1, cc, slot)
+        lw, wc = warm.prefill_slot(batch1, wc, slot)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lw))
+        for a, b in zip(_slot_leaves(cc, slot), _slot_leaves(wc, slot)):
+            np.testing.assert_array_equal(a, b)
+    st = warm.prefix_cache.stats
+    assert st["hit_chunks"] == 3 and st["prefill_toks_saved"] == 3 * NB
+    assert st["bytes"] <= warm.ecfg.prefix_cache_bytes
+
+
+def test_warm_hit_extends_cached_path():
+    """A third request reusing the longest prompt hits its full eligible
+    prefix (the earlier requests' suffix chunks were inserted too)."""
+    _, warm = _engines()
+    (pa,) = _prompts(shared_chunks=3, n=1, seed=7)
+    wc = warm.init_caches()
+    batch1 = {"tokens": jnp.asarray(pa[None], jnp.int32)}
+    before = warm.prefix_cache.stats["hit_chunks"]
+    _, wc = warm.prefill_slot(batch1, wc, 0)
+    _, wc = warm.prefill_slot(batch1, wc, 1)
+    # identical prompt: second pass hits every eligible chunk (all but the
+    # one that must stay suffix so prefill still emits last-token logits)
+    assert (warm.prefix_cache.stats["hit_chunks"] - before
+            >= (PROMPT_PAD - 1) // NB)
+
+
+def test_continuous_batching_prefix_on_off_token_parity():
+    """Greedy continuous batching returns identical tokens with the prefix
+    cache on and off, and reports hit-rate/saved-token stats."""
+    cold, warm = _engines()
+    outs = {}
+    for name, eng in (("off", cold), ("on", warm)):
+        sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+        for i, prompt in enumerate(_prompts(shared_chunks=3, n=4, seed=1)):
+            sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=5))
+        outs[name] = {r.rid: r.tokens for r in sched.run_continuous()}
+        if name == "on":
+            assert sched.last_stats["prefix_hit_rate"] > 0
+            assert sched.last_stats["prefill_toks_saved"] > 0
+    assert sorted(outs["off"]) == sorted(outs["on"])
+    for rid in outs["off"]:
+        np.testing.assert_array_equal(outs["off"][rid], outs["on"][rid])
+    # last_stats is per-run, not engine-lifetime: replaying the workload
+    # hits every eligible chunk, so THIS run's rate is exactly 1.0
+    sched = Scheduler(warm, prompt_pad=PROMPT_PAD)
+    for i, prompt in enumerate(_prompts(shared_chunks=3, n=4, seed=1)):
+        sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=5))
+    sched.run_continuous()
+    assert sched.last_stats["prefix_hit_rate"] == 1.0
+    assert (sched.last_stats["prefill_toks_saved"]
+            == 4 * ((PROMPT_PAD - 1) // NB) * NB)
+
+
+def test_admission_off_reuses_but_never_inserts():
+    _engines()
+    model, params = _ENGINES["model"]
+    eng = Engine(model, params,
+                 EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                              prefill_mode="streaming", eos_id=EOS,
+                              prefix_cache=True))
+    sched = Scheduler(eng, prompt_pad=PROMPT_PAD, prefix_admission="off")
+    for i, prompt in enumerate(_prompts(shared_chunks=3, n=3, seed=2)):
+        sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=2))
+    sched.run_continuous()
+    st = eng.prefix_cache.stats
+    assert st["inserts"] == 0 and st["hit_chunks"] == 0
+    assert sched.last_stats["prefix_hit_rate"] == 0.0
+
+
+def test_engine_eviction_respects_byte_budget():
+    """A tiny budget keeps the store within bounds while serving stays
+    correct (warm results still match the unbounded-warm engine)."""
+    _engines()
+    model, params = _ENGINES["model"]
+    # budget for about two chunks of payload
+    probe = Engine(model, params,
+                   EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                                prefill_mode="streaming", eos_id=EOS,
+                                prefix_cache=True))
+    pa = _prompts(shared_chunks=3, n=1, seed=3)[0]
+    wc = probe.init_caches()
+    _, wc = probe.prefill_slot({"tokens": jnp.asarray(pa[None], jnp.int32)}, wc, 0)
+    per_chunk = probe.prefix_cache.stats["bytes"] // max(
+        probe.prefix_cache.stats["nodes"], 1)
+
+    small = Engine(model, params,
+                   EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                                prefill_mode="streaming", eos_id=EOS,
+                                prefix_cache=True,
+                                prefix_cache_bytes=2 * per_chunk))
+    sched = Scheduler(small, prompt_pad=PROMPT_PAD)
+    prompts = _prompts(shared_chunks=1, n=5, seed=4)
+    for i, prompt in enumerate(prompts):
+        sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=2))
+    out = sched.run_continuous()
+    assert len(out) == len(prompts)
+    st = small.prefix_cache.stats
+    assert st["evictions"] > 0
+    assert st["bytes"] <= small.ecfg.prefix_cache_bytes
+    assert small.prefix_cache.store.total_bytes == st["bytes"]
+
+
+@pytest.mark.kernel
+def test_warm_equals_cold_through_interpret_kernels():
+    """Warm ≡ cold holds on the forced Pallas-kernel path too (interpret
+    mode on CPU): the suffix pipeline's gear_compress / gear_decode /
+    flash_prefill_block kernels see prefix-cache shapes in CI."""
+    _engines()
+    model, params = _ENGINES["model"]
+    ecfg = EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                        prefill_mode="streaming", eos_id=EOS,
+                        fused="interpret")
+    cold = Engine(model, params, ecfg)
+    warm = Engine(model, params, dataclasses.replace(ecfg, prefix_cache=True))
+    pa, pb = _prompts(shared_chunks=2, n=2, seed=5)
+    cc, wc = cold.init_caches(), warm.init_caches()
+    for slot, prompt in ((0, pa), (1, pb)):
+        batch1 = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+        lc, cc = cold.prefill_slot(batch1, cc, slot)
+        lw, wc = warm.prefill_slot(batch1, wc, slot)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lw))
+        for a, b in zip(_slot_leaves(cc, slot), _slot_leaves(wc, slot)):
+            np.testing.assert_array_equal(a, b)
+    assert warm.prefix_cache.stats["hit_chunks"] == 2
+
+
+def test_prefix_cache_config_validation():
+    with pytest.raises(ValueError, match="streaming"):
+        EngineConfig(batch=1, capacity=64, policy=GEAR_POL, prefix_cache=True)
+    _engines()
+    model, params = _ENGINES["model"]
+    with pytest.raises(ValueError, match="prefix_cache unsupported"):
+        Engine(model, params,
+               EngineConfig(batch=1, capacity=64, policy=FP16,
+                            prefill_mode="streaming", prefix_cache=True))
+    win = dataclasses.replace(TINY, attn_pattern="local_global",
+                              pattern_locals=1, local_window=8)
+    wmodel = build_model(win)
+    with pytest.raises(ValueError, match="prefix_cache unsupported"):
+        Engine(wmodel, wmodel.init(jax.random.PRNGKey(0)),
+               EngineConfig(batch=1, capacity=64, policy=GEAR_POL,
+                            prefill_mode="streaming", prefix_cache=True))
