@@ -1,0 +1,169 @@
+"""Paged-pool bench: serving capacity at fixed cache bytes, paged vs dense.
+
+The headline win of the paged compressed KV layout (``EngineConfig.layout=
+'paged'``, repro.serving.pagedpool): a dense engine reserves FULL-capacity
+compressed history per slot, so a short request costs the same cache bytes
+as the longest one the engine can serve; the paged engine reserves
+page-granular history (one page = one ``n_b``-token GEAR chunk across all
+layers), so concurrency is pool-bytes-limited and short requests pack.
+
+* **smoke** (CI): byte-exact packing math from the engine's own accounting
+  (``Engine.cache_nbytes`` / ``PagePool.page_bytes`` — no timing involved),
+  verified against real ``PagePool`` admissions: how many ``REQ_TOKENS``-
+  token contexts fit in the bytes a ``B0``-slot dense engine reserves.
+  Gate: >= ``CONCURRENCY_FLOOR``x (matches
+  benchmarks/check_regression.py's ``concurrent_over`` rule).  Plus an
+  end-to-end decode-throughput comparison at equal batch through
+  ``Scheduler.run_continuous`` — the indirection of gathering pages by
+  block table must not cost decode speed (``*_over_*`` ratio row, 15%
+  tolerance).
+* **full**: additionally sweeps the request length to show packing ratio
+  vs how much of the dense capacity a request actually uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import ModelConfig
+from repro.core.policy import named_policy
+from repro.models.model import build_model
+from repro.serving import (Engine, EngineConfig, PagePool, Request, Scheduler,
+                           pages_needed)
+
+BENCH_CFG = ModelConfig(name="bench-paged", family="dense", num_layers=2,
+                        d_model=128, num_heads=4, num_kv_heads=2, head_dim=64,
+                        d_ff=256, vocab_size=512)
+POLICY = named_policy("gear_kcvt4")        # 4-bit GEAR, n_b = 64
+B0 = 4                                     # dense engine slots
+CAPACITY = 2048                            # worst-case context the engine serves
+REQ_TOKENS = 256                           # what a typical request actually uses
+CONCURRENCY_FLOOR = 3.0                    # must match check_regression.py
+
+# decode-throughput section (small geometry: equal batch, equal requests)
+TP_CAPACITY = 512
+TP_PROMPT = 64
+TP_GEN = 32
+TP_REQ = 8
+
+
+def _packing(model, params):
+    """Max concurrent REQ_TOKENS-token contexts inside the bytes a B0-slot
+    dense engine reserves — pure byte math from engine accounting, then
+    re-verified by driving the real allocator to exhaustion."""
+    nb = POLICY.buffer_size
+    n_chunks = CAPACITY // nb
+    ecfg = EngineConfig(batch=B0, capacity=CAPACITY, policy=POLICY)
+    eng_d = Engine(model, params, ecfg)
+    dense_per_ctx = Engine.cache_nbytes(eng_d.init_caches()) // B0
+    eng_p = Engine(model, params, dataclasses.replace(ecfg, layout="paged"))
+    page_bytes = eng_p.pool.page_bytes
+    # a dense slot's closed-chunk arrays hold exactly n_chunks pages' worth
+    # of the pooled fields; the remainder is the per-slot FP16 streaming
+    # buffer (+ scalars), which the paged layout keeps per slot too
+    buf_per_slot = dense_per_ctx - n_chunks * page_bytes
+    assert buf_per_slot > 0, (dense_per_ctx, n_chunks, page_bytes)
+
+    pages_per_req = pages_needed(REQ_TOKENS, nb)
+    paged_per_ctx = pages_per_req * page_bytes + buf_per_slot
+    budget = B0 * dense_per_ctx
+    n_paged = budget // paged_per_ctx
+
+    # verify with the real allocator: n_paged reservations fit, no more
+    pool = PagePool(n_pages=n_paged * pages_per_req + 1, batch=n_paged,
+                    n_chunks=pages_per_req, page_bytes=page_bytes)
+    for slot in range(n_paged):
+        pool.admit(slot, pages_per_req)
+    pool.check()
+    assert pool.free_pages == 0 and not pool.can_admit(pages_per_req)
+    total_paged = (pool.total_bytes + page_bytes            # + zero page
+                   + n_paged * buf_per_slot)
+    assert total_paged <= budget + page_bytes, (total_paged, budget)
+
+    return n_paged, dense_per_ctx, paged_per_ctx, page_bytes
+
+
+def _decode_tok_per_s(eng, iters: int, seed: int = 7) -> float:
+    """Median decode tok/s over ``iters`` runs of the canned request queue
+    through continuous batching (first run extra: compiles)."""
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, BENCH_CFG.vocab_size, size=TP_PROMPT)
+               for _ in range(TP_REQ)]
+    rates = []
+    for it in range(iters + 1):
+        sched = Scheduler(eng, prompt_pad=TP_PROMPT)
+        for rid, toks in enumerate(prompts):
+            sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=TP_GEN))
+        results = sched.run_continuous()
+        st = sched.last_stats
+        assert len(results) == TP_REQ
+        rates.append(st["tokens"] / st["decode_s"])
+    rates = sorted(rates[1:])
+    return rates[len(rates) // 2]
+
+
+def run(smoke: bool = False):
+    model = build_model(BENCH_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_paged, dense_ctx, paged_ctx, page_bytes = _packing(model, params)
+    ratio = n_paged / B0
+    emit("paged/max_contexts_dense", 0.0,
+         f"{B0} contexts (slot = {dense_ctx/1e3:.0f} KB at capacity "
+         f"{CAPACITY})", value=B0)
+    emit("paged/max_contexts_paged", 0.0,
+         f"{n_paged} x {REQ_TOKENS}-token contexts in the same bytes "
+         f"({paged_ctx/1e3:.0f} KB each: {pages_needed(REQ_TOKENS, POLICY.buffer_size)} "
+         f"pages x {page_bytes/1e3:.1f} KB + streaming buffer)", value=n_paged)
+    emit("paged/concurrent_over_dense", 0.0,
+         f"{ratio:.2f}x concurrent contexts at fixed cache bytes "
+         f"(gate: >= {CONCURRENCY_FLOOR}x)", value=ratio)
+    assert ratio >= CONCURRENCY_FLOOR, (
+        f"paged packing {ratio:.2f}x below floor {CONCURRENCY_FLOOR}x")
+
+    iters = 2 if smoke else 5
+    tcfg = EngineConfig(batch=B0, capacity=TP_CAPACITY, policy=POLICY)
+    tok_dense = _decode_tok_per_s(Engine(model, params, tcfg), iters)
+    eng_p = Engine(model, params, dataclasses.replace(tcfg, layout="paged"))
+    tok_paged = _decode_tok_per_s(eng_p, iters)
+    eng_p.pool.check()
+    speed = tok_paged / tok_dense
+    emit("paged/decode_tok_per_s_dense", 0.0,
+         f"{tok_dense:.0f} tok/s dense ({TP_REQ} reqs, batch {B0}, "
+         f"{TP_PROMPT}+{TP_GEN} tokens)", value=tok_dense)
+    emit("paged/decode_tok_per_s_paged", 0.0,
+         f"{tok_paged:.0f} tok/s paged (same workload)", value=tok_paged)
+    emit("paged/decode_paged_over_dense", 0.0,
+         f"{speed:.2f}x decode throughput, paged over dense", value=speed)
+
+    if not smoke:
+        nb = POLICY.buffer_size
+        for t in (64, 256, 512, 1024, 2048):
+            per = pages_needed(t, nb) * page_bytes + (dense_ctx
+                                                      - (CAPACITY // nb) * page_bytes)
+            emit(f"paged/sweep_concurrent/req_{t}tok", 0.0,
+                 f"{(B0 * dense_ctx // per) / B0:.2f}x at {t}-token requests",
+                 value=(B0 * dense_ctx // per) / B0)
+    return ratio, speed
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing iterations (CI)")
+    ap.add_argument("--json", default=None,
+                    help="also write the emitted rows to this JSON file")
+    args = ap.parse_args()
+    t0 = time.time()
+    run(smoke=args.smoke)
+    print(f"bench_paged done in {time.time() - t0:.1f}s")
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)

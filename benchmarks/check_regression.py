@@ -22,6 +22,9 @@ in the committed baseline against the freshly-measured rows and fails on:
 * ``*hit_rate*`` / ``*toks_saved*`` — ANY drop (the canned shared-prefix
   workload of bench_prefix is deterministic: fewer trie hits means the
   prefix cache stopped matching or admission broke, so zero tolerance);
+* ``*concurrent_over*`` — bench_paged's fixed-byte packing ratio: pure page
+  arithmetic from the engine's own byte accounting, so ANY drop fails, plus
+  an absolute >= 3x floor (the paged layout's headline capacity claim);
 * metrics missing from the bench output (a silently-dropped bench row must
   fail loudly, not skip the gate).
 
@@ -50,6 +53,7 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+CONCURRENCY_FLOOR = 3.0      # bench_paged: min concurrent-contexts ratio
 
 
 def load_rows(bench_dir: str) -> dict[str, float]:
@@ -89,6 +93,20 @@ def check(baseline: dict[str, float], rows: dict[str, float],
                 failures.append(
                     f"{name}: {new:g} bytes > {ref * (1.0 + mem_tol):g} "
                     f"(baseline {ref:g} + {mem_tol:.0%} compiler headroom)")
+            else:
+                print(f"ok   {name}: {new:g} (baseline {ref:g})")
+        elif "concurrent_over" in name:
+            # bench_paged's packing ratio is pure byte math (page counts from
+            # the engine's own accounting) — deterministic, so any drop fails,
+            # and the paper-level claim keeps an absolute >= 3x floor
+            if new < CONCURRENCY_FLOOR - 1e-9:
+                failures.append(
+                    f"{name}: {new:g}x below the {CONCURRENCY_FLOOR:g}x "
+                    "concurrency floor (paged packing broke)")
+            elif new < ref - 1e-9:
+                failures.append(
+                    f"{name}: {new:g} < baseline {ref:g} (deterministic page "
+                    "math: any drop fails)")
             else:
                 print(f"ok   {name}: {new:g} (baseline {ref:g})")
         elif "nbytes" not in name and new < ref * (1.0 - tol):

@@ -76,6 +76,17 @@ __all__ = [
     "reset_slot",
     "prefill_into_slot",
     "fresh_batch1_cache",
+    "PagedGEARLayerCache",
+    "paged_supported",
+    "page_field_shapes",
+    "page_nbytes",
+    "init_paged_layer_cache",
+    "paged_to_dense",
+    "gather_pool_chunks",
+    "scatter_pool_chunks",
+    "zero_pool_pages",
+    "append_token_paged",
+    "attend_paged",
 ]
 
 NEG_INF = -1e30
@@ -1080,6 +1091,289 @@ def splice_prefix_chunks(cfg: CacheConfig, cache, slot, chunks: list[dict],
         upd[field] = jax.lax.dynamic_update_slice(
             dst, seg.astype(dst.dtype), tuple(starts))
     return dataclasses.replace(cache, **upd)
+
+
+# ---------------------------------------------------------------------------
+# Paged compressed KV pool (vLLM-style block tables over GEAR chunks)
+#
+# One **page** holds one n_b-token chunk's compressed fields for one layer:
+# every chunk-indexed array of the dense layout (see ``_chunk_row_axes``)
+# gets a pooled twin whose batch axis is replaced by a page axis and whose
+# chunk-row axis is sliced to one chunk's rows.  A per-slot **block table**
+# ``[B, C]`` of page ids maps logical chunk ``c`` of slot ``b`` to its pool
+# page; page 0 is the permanently-zero reserved page, so table entries past
+# a slot's allocated extent read as the dense layout's zeros — which is what
+# makes ``paged_to_dense`` *bitwise* equal to the dense-slot cache (the
+# allocator zeroes fresh pages at admission to keep the invariant; see
+# DESIGN.md §5).  The streaming buffer and ``length`` stay per-slot: only
+# closed (immutable) chunks live in the pool, which is why prefix-cache
+# sharing is pure refcounting with no copy-on-write copies ever needed.
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "k_packed", "k_scale", "k_zero", "v_packed", "v_scale", "v_zero",
+        "k_a", "k_b", "v_a", "v_b",
+        "k_sp_val", "k_sp_idx", "v_sp_val", "v_sp_idx",
+        "buf_k", "buf_v", "length",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class PagedGEARLayerCache:
+    """GEAR layer cache with pooled chunk storage.
+
+    Pooled fields are ``[P, ...page]`` (P pages shared by every slot); the
+    streaming buffer ``[B, H, n_b, Dh]`` and ``length [B]`` remain per-slot.
+    The block table addressing the pool is *engine-owned metadata* passed
+    alongside (like ``pos``), not cache state — it changes only at
+    admission/release, never inside a decode step.
+    """
+    k_packed: Any; k_scale: Any; k_zero: Any
+    v_packed: Any; v_scale: Any; v_zero: Any
+    k_a: Any; k_b: Any; v_a: Any; v_b: Any
+    k_sp_val: Any; k_sp_idx: Any; v_sp_val: Any; v_sp_idx: Any
+    buf_k: Any; buf_v: Any
+    length: Any
+
+
+_POOLED_FIELDS = ("k_packed", "k_scale", "k_zero", "v_packed", "v_scale",
+                  "v_zero", "k_a", "k_b", "v_a", "v_b",
+                  "k_sp_val", "k_sp_idx", "v_sp_val", "v_sp_idx")
+
+
+def paged_supported(cfg: CacheConfig) -> bool:
+    """True when this layer's cache can live in the paged pool.
+
+    Any GEAR layout qualifies (the gather path reassembles the dense layout
+    bit-for-bit regardless of quant scheme); fp16 and window caches have no
+    chunk-decomposable state and stay dense — as do RWKV / SSM recurrent
+    states, which the serving layer never pages (DESIGN.md §5).
+    """
+    return cfg.kind == "gear" and not cfg.policy.is_fp16
+
+
+def page_field_shapes(cfg: CacheConfig, dtype=jnp.bfloat16) -> dict:
+    """Per-field ``(page_shape, dtype)`` of one pool page.
+
+    Derived from the dense batch-1 geometry: drop the batch axis, slice the
+    chunk-row axis (``_chunk_row_axes``) to one chunk's rows.  E.g.
+    ``k_packed [1, H, S, Lp] -> (H, n_b, Lp)``, ``k_b [1, H, C, Dh, r] ->
+    (H, 1, Dh, r)``.
+    """
+    cfg1 = cfg if cfg.batch == 1 else dataclasses.replace(cfg, batch=1)
+    abs1 = jax.eval_shape(lambda: init_layer_cache(cfg1, dtype))
+    out = {}
+    for field, (rpc, ax) in _chunk_row_axes(cfg).items():
+        leaf = getattr(abs1, field)
+        if leaf is None:
+            out[field] = None
+            continue
+        shape = list(leaf.shape[1:])          # drop the batch axis
+        shape[len(shape) + ax] = rpc          # row axis counted from the end
+        out[field] = (tuple(shape), leaf.dtype)
+    return out
+
+
+def page_nbytes(cfg: CacheConfig, dtype=jnp.bfloat16) -> int:
+    """Bytes of one pool page for ONE layer of this geometry."""
+    total = 0
+    for spec in page_field_shapes(cfg, dtype).values():
+        if spec is None:
+            continue
+        shape, dt = spec
+        total += int(jnp.dtype(dt).itemsize) * functools.reduce(
+            lambda a, b: a * b, shape, 1)
+    return total
+
+
+def init_paged_layer_cache(cfg: CacheConfig, n_pages: int,
+                           dtype=jnp.bfloat16) -> PagedGEARLayerCache:
+    """Zero pool of ``n_pages`` pages + per-slot buffers for ``cfg.batch``.
+
+    Page 0 is the reserved zero page (never allocated): a fresh cache with
+    an all-zero block table gathers back to exactly the dense zero cache.
+    """
+    if not paged_supported(cfg):
+        raise ValueError(f"paged layout requires a GEAR cache, got {cfg.kind!r}")
+    if n_pages < 2:
+        raise ValueError(f"need >= 2 pages (page 0 is reserved), got {n_pages}")
+    B, H, Dh = cfg.batch, cfg.kv_heads, cfg.head_dim
+    shapes = page_field_shapes(cfg, dtype)
+    fields = {}
+    for field in _POOLED_FIELDS:
+        spec = shapes.get(field)
+        fields[field] = (None if spec is None
+                         else jnp.zeros((n_pages,) + spec[0], spec[1]))
+    return PagedGEARLayerCache(
+        **fields,
+        buf_k=jnp.zeros((B, H, cfg.chunk, Dh), dtype),
+        buf_v=jnp.zeros((B, H, cfg.chunk, Dh), dtype),
+        length=jnp.zeros((B,), jnp.int32),
+    )
+
+
+def paged_to_dense(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                   block_tables: jnp.ndarray) -> GEARLayerCache:
+    """Gather the pool through ``block_tables [B, C]`` into a dense cache.
+
+    Bitwise equal to the dense-slot layout under the allocator's zero-page
+    invariant (unallocated / unwritten table entries point at zeroed
+    pages), so the portable decode path is literally ``attend(gather(...))``
+    and cache-parity tests can compare arrays directly.
+    """
+    bt = jnp.asarray(block_tables, jnp.int32)
+    spec = _chunk_row_axes(cfg)
+    fields = {f: None for f in _POOLED_FIELDS}
+    for field, (rpc, ax) in spec.items():
+        pool = getattr(pcache, field)
+        if pool is None:
+            fields[field] = None
+            continue
+        g = pool[bt]                      # [B, C, ...page]
+        row_axis = g.ndim + ax            # position of the rpc axis in g
+        g = jnp.moveaxis(g, 1, row_axis - 1)
+        shape = list(g.shape)
+        shape[row_axis - 1:row_axis + 1] = [shape[row_axis - 1] * shape[row_axis]]
+        fields[field] = g.reshape(shape)
+    return GEARLayerCache(**fields, buf_k=pcache.buf_k, buf_v=pcache.buf_v,
+                          length=pcache.length)
+
+
+def gather_pool_chunks(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                       pages: jnp.ndarray) -> list[dict]:
+    """Read pool pages into per-chunk payload dicts (batch-1 layout).
+
+    The inverse of :func:`scatter_pool_chunks`: each payload field carries
+    the ``[1, ...]`` batch axis :func:`splice_prefix_chunks` expects, so a
+    prefix-cache hit gathers its pages straight into the batch-1 scaffold.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    n = pages.shape[0]
+    spec = _chunk_row_axes(cfg)
+    out = []
+    for c in range(n):
+        payload = {}
+        for field in spec:
+            pool = getattr(pcache, field)
+            if pool is None:
+                continue
+            payload[field] = pool[pages[c]][None]       # [1, ...page]
+        out.append(payload)
+    return out
+
+
+def scatter_pool_chunks(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                        pages: jnp.ndarray,
+                        chunks: list[dict]) -> PagedGEARLayerCache:
+    """Write per-chunk payload dicts (``extract_prefix_chunks`` layout,
+    batch-1) into pool pages ``pages [len(chunks)]`` — the paged half of the
+    slot-splice protocol: a batch-1 prefill's closed chunks become the
+    slot's pages.  Out-of-range page ids drop the write.
+    """
+    if not chunks:
+        return pcache
+    pages = jnp.asarray(pages, jnp.int32)
+    upd = {}
+    for field in _chunk_row_axes(cfg):
+        pool = getattr(pcache, field)
+        if pool is None:
+            continue
+        vals = jnp.stack([ch[field][0] for ch in chunks], axis=0)
+        upd[field] = pool.at[pages].set(vals.astype(pool.dtype), mode="drop")
+    return dataclasses.replace(pcache, **upd)
+
+
+def zero_pool_pages(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                    pages: jnp.ndarray) -> PagedGEARLayerCache:
+    """Zero the given pool pages — run at admission on freshly allocated
+    pages so exposed-but-unwritten block-table entries keep gathering the
+    dense layout's zeros (the bit-parity invariant; DESIGN.md §5)."""
+    pages = jnp.asarray(pages, jnp.int32)
+    upd = {}
+    for field in _chunk_row_axes(cfg):
+        pool = getattr(pcache, field)
+        if pool is None:
+            continue
+        zero = jnp.zeros((pages.shape[0],) + pool.shape[1:], pool.dtype)
+        upd[field] = pool.at[pages].set(zero, mode="drop")
+    return dataclasses.replace(pcache, **upd)
+
+
+def append_token_paged(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                       block_tables: jnp.ndarray, k_t: jnp.ndarray,
+                       v_t: jnp.ndarray, key: jax.Array | None = None):
+    """Paged twin of :func:`append_token`: same buffer writes and the same
+    slot-invariant compression event, but a closing chunk scatters into the
+    slot's block-table page instead of dense batch rows.  Slots not at a
+    chunk boundary (or past capacity) redirect the page index out of bounds
+    and the scatter drops — one batched write serves every phase mix.
+    """
+    pol = cfg.policy
+    nb = cfg.chunk
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    buf_pos = pcache.length % nb
+    buf_k = _slot_rows_update(pcache.buf_k, k_t[:, :, None, :], buf_pos)
+    buf_v = _slot_rows_update(pcache.buf_v, v_t[:, :, None, :], buf_pos)
+    pcache = dataclasses.replace(pcache, buf_k=buf_k, buf_v=buf_v,
+                                 length=pcache.length + 1)
+
+    def compress(c):
+        need = (c.length % nb == 0) & (c.length > 0) & (c.length <= cfg.capacity)
+        cidx = jnp.clip(jnp.maximum(c.length - 1, 0) // nb, 0, cfg.n_chunks - 1)
+        P = c.k_packed.shape[0]
+        page = jnp.take_along_axis(bt, cidx[:, None], axis=1)[:, 0]
+        # page 0 is the reserved zero page: an idle slot (all-zero table
+        # row) crossing a buffer boundary must drop its write rather than
+        # corrupt the invariant every slot's out-of-extent reads depend on
+        page = jnp.where(need & (page > 0), page, P)   # OOB -> scatter drops
+        B, H, _, Dh = c.buf_k.shape
+        kc = c.buf_k[:, :, None, :, :].astype(jnp.float32)
+        vc = c.buf_v[:, :, None, :, :].astype(jnp.float32)
+        # same slot-/step-invariant key as the dense path: a paged slot's
+        # chunk is bit-identical to the dense slot's (splice isolation)
+        comp = _compress_chunks(cfg, kc, vc, pol.rank_decode, key)
+        upd = {}
+
+        def put(field, vals):
+            pool = getattr(c, field)
+            upd[field] = pool.at[page].set(vals.astype(pool.dtype), mode="drop")
+
+        put("k_packed", comp["k_packed"].reshape(B, H, nb, -1))
+        put("v_packed", comp["v_packed"].reshape(B, H, nb, -1))
+        for kv in ("k", "v"):
+            put(f"{kv}_scale", _flatten_stat(cfg, comp[f"{kv}_scale"], kv))
+            put(f"{kv}_zero", _flatten_stat(cfg, comp[f"{kv}_zero"], kv))
+            if pol.use_lowrank:
+                put(f"{kv}_a", comp[f"{kv}_a"].reshape(B, H, nb, pol.rank))
+                put(f"{kv}_b", comp[f"{kv}_b"])
+            if pol.use_sparse:
+                sv, si = comp[f"{kv}_sp_val"], comp[f"{kv}_sp_idx"]
+                if kv == "v" or cfg.k_scheme()[0] != "per_channel":
+                    sv = sv.reshape(B, H, nb, sv.shape[-1])
+                    si = si.reshape(B, H, nb, si.shape[-1])
+                put(f"{kv}_sp_val", sv)
+                put(f"{kv}_sp_idx", si)
+        return dataclasses.replace(c, **upd)
+
+    any_boundary = jnp.any((pcache.length % nb == 0) & (pcache.length > 0)
+                           & (pcache.length <= cfg.capacity))
+    return jax.lax.cond(any_boundary, compress, lambda c: c, pcache)
+
+
+def attend_paged(cfg: CacheConfig, pcache: PagedGEARLayerCache,
+                 block_tables: jnp.ndarray, q: jnp.ndarray, scale: float,
+                 use_factored: bool = True) -> jnp.ndarray:
+    """Portable paged decode attention: gather pages to the dense layout,
+    then the standard factored :func:`attend` — identical values in
+    identical shapes, so the result is bit-identical to the dense path.
+    The fused twin (:func:`repro.kernels.ops.gear_attend_paged`) gathers by
+    table index inside the kernel grid instead."""
+    return attend(cfg, paged_to_dense(cfg, pcache, block_tables), q, scale,
+                  use_factored=use_factored)
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,7 @@
 
 Every batch is a pure function of (seed, step, shard), so a restarted or
 elastically-rescaled job replays the exact token stream — the property the
-fault-tolerance story depends on (DESIGN.md §5).  The generator produces
+fault-tolerance story depends on (DESIGN.md §6).  The generator produces
 Zipf-ish token draws with short-range repetition structure so losses are
 learnable (benchmarks that train a small model rely on that).
 """

@@ -41,8 +41,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gear_decode"]
+__all__ = ["gear_decode", "gear_decode_paged"]
 
 NEG_INF = -1e30
 
@@ -209,3 +210,113 @@ def gear_decode(
         interpret=interpret,
     )(n_comp_arr, q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero,
       k_a, k_b, v_a, v_b, k_sp_val, k_sp_idx, v_sp_val, v_sp_idx)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "chunk", "scale_factor", "interpret"),
+)
+def gear_decode_paged(
+    q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, n_comp,
+    block_tables,
+    k_a=None, k_b=None, v_a=None, v_b=None,
+    k_sp_val=None, k_sp_idx=None, v_sp_val=None, v_sp_idx=None,
+    *, bits: int, chunk: int, scale_factor: float, interpret: bool = False,
+):
+    """Paged twin of :func:`gear_decode`: same kernel body, same math, but
+    the compressed operands are *head-flattened pool pages* addressed
+    through scalar-prefetched block tables instead of contiguous rows.
+
+    Pool operands are ``[P*H, ...one-chunk-block]`` (a pool leaf
+    ``[P, H, ...]`` reshaped by the caller): page ``p``, head ``h`` lives at
+    row ``p*H + h``.  ``block_tables [B, C]`` arrives via
+    ``PrefetchScalarGridSpec`` so every BlockSpec index map can compute its
+    DMA source ``row = bt[bh // H, c] * H + bh % H`` before the grid step
+    runs — the gather happens in the DMA engine, not as kernel gather ops.
+    Because the pool's page 0 is the reserved zero page and fresh pages are
+    zeroed at admission, out-of-extent table entries stream the same zero
+    bytes the dense layout holds there, and the accumulated (acc, m, l)
+    triple is bit-identical to :func:`gear_decode` on the gathered-dense
+    cache.  ``n_comp`` masking is unchanged (ragged per-row extents).
+    """
+    BH, G, Dh = q.shape
+    B, C = block_tables.shape
+    H = BH // B
+    Lp = k_packed.shape[-1]
+    use_lr = k_a is not None
+    use_sp = k_sp_val is not None
+    r = k_a.shape[-1] if use_lr else 1
+    ks2 = k_sp_val.shape[-1] if use_sp else 1
+    kv2 = v_sp_val.shape[-1] if use_sp else 1
+    gv = v_scale.shape[-1]
+    nb = chunk
+    f32 = jnp.float32
+
+    # page-row index map shared by every pool operand: the chunk coordinate
+    # is consumed by the block-table lookup, the block covers the whole page
+    def prow(*tail):
+        return lambda x, c, bt: ((bt[x // H, c] * H + x % H).astype(jnp.int32),
+                                 *tail)
+
+    # dummy single-page operands when the policy has no low-rank / sparse
+    # fields; their index maps pin to row 0 so no table lookup happens
+    zrow = lambda *tail: (lambda x, c, bt: (0, *tail))
+    if not use_lr:
+        k_a = jnp.zeros((1, nb, 1), f32); k_b = jnp.zeros((1, 1, Dh, 1), f32)
+        v_a = jnp.zeros((1, nb, 1), f32); v_b = jnp.zeros((1, 1, Dh, 1), f32)
+    if not use_sp:
+        k_sp_val = jnp.zeros((1, 1, Dh, 1), f32)
+        k_sp_idx = jnp.full((1, 1, Dh, 1), -1, jnp.int32)
+        v_sp_val = jnp.zeros((1, nb, 1), f32)
+        v_sp_idx = jnp.full((1, nb, 1), -1, jnp.int32)
+    lr_row = prow if use_lr else zrow
+    sp_row = prow if use_sp else zrow
+
+    n_comp_arr = jnp.broadcast_to(jnp.asarray(n_comp, jnp.int32), (BH,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def kernel(bt_ref, *refs):
+        del bt_ref  # consumed by the index maps
+        _kernel(*refs, bits=bits, chunk=chunk, scale_factor=scale_factor,
+                use_lr=use_lr, use_sp=use_sp)
+
+    bh = lambda x, c, bt: (x, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, C),
+        in_specs=[
+            pl.BlockSpec((1,), lambda x, c, bt: (x,)),             # n_comp[bh]
+            pl.BlockSpec((1, G, Dh), bh),                          # q
+            pl.BlockSpec((1, chunk, Lp), prow(0, 0)),              # k_packed
+            pl.BlockSpec((1, 1, Dh), prow(0, 0)),                  # k_scale
+            pl.BlockSpec((1, 1, Dh), prow(0, 0)),                  # k_zero
+            pl.BlockSpec((1, chunk, Lp), prow(0, 0)),              # v_packed
+            pl.BlockSpec((1, chunk, gv), prow(0, 0)),              # v_scale
+            pl.BlockSpec((1, chunk, gv), prow(0, 0)),              # v_zero
+            pl.BlockSpec((1, chunk, r), lr_row(0, 0)),             # k_a
+            pl.BlockSpec((1, 1, Dh, r), lr_row(0, 0, 0)),          # k_b
+            pl.BlockSpec((1, chunk, r), lr_row(0, 0)),             # v_a
+            pl.BlockSpec((1, 1, Dh, r), lr_row(0, 0, 0)),          # v_b
+            pl.BlockSpec((1, 1, Dh, ks2), sp_row(0, 0, 0)),        # k_sp_val
+            pl.BlockSpec((1, 1, Dh, ks2), sp_row(0, 0, 0)),        # k_sp_idx
+            pl.BlockSpec((1, chunk, kv2), sp_row(0, 0)),           # v_sp_val
+            pl.BlockSpec((1, chunk, kv2), sp_row(0, 0)),           # v_sp_idx
+        ],
+        out_specs=(
+            pl.BlockSpec((1, G, Dh), bh),
+            pl.BlockSpec((1, G, 128), bh),
+            pl.BlockSpec((1, G, 128), bh),
+        ),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((BH, G, Dh), f32),
+        jax.ShapeDtypeStruct((BH, G, 128), f32),
+        jax.ShapeDtypeStruct((BH, G, 128), f32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bt, n_comp_arr, q, k_packed, k_scale, k_zero, v_packed, v_scale,
+      v_zero, k_a, k_b, v_a, v_b, k_sp_val, k_sp_idx, v_sp_val, v_sp_idx)

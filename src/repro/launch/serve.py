@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
       --policy gear_kcvt4 --batch 4 --prompt 64 --gen 32
+
+Built entirely on the public :mod:`repro.serving` API.  ``--mode wave``
+drives :meth:`Engine.generate` lockstep; ``--mode continuous`` submits
+per-prompt :class:`Request` objects to :class:`Scheduler.run_continuous`.
+``--layout paged`` serves from the pooled compressed-chunk page layout
+(continuous mode only — pages are reserved per request, so concurrency is
+pool-bytes-limited instead of slot-count-limited).
 """
 
 from __future__ import annotations
@@ -11,12 +18,14 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core.policy import named_policy
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import make_test_mesh
 from repro.models.model import build_model
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving import (CacheLayout, Engine, EngineConfig, Request,
+                           Scheduler)
 
 
 def main():
@@ -30,6 +39,13 @@ def main():
     ap.add_argument("--buffer", type=int, default=0, help="override n_b")
     ap.add_argument("--mesh", default="")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mode", default="wave", choices=["wave", "continuous"])
+    ap.add_argument("--layout", default="dense", choices=["dense", "paged"])
+    ap.add_argument("--pool-bytes", type=int, default=0,
+                    help="paged: pool device-byte budget (default: dense-"
+                         "equivalent batch*n_chunks pages)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous: queued requests (default 2*batch)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -38,6 +54,9 @@ def main():
     if args.buffer:
         pol = dataclasses.replace(pol, buffer_size=args.buffer,
                                   group=min(pol.group, args.buffer))
+    layout = CacheLayout(args.layout)
+    if layout is CacheLayout.PAGED and args.mode == "wave":
+        args.mode = "continuous"   # paged serves through continuous batching
     mesh = None
     if args.mesh:
         dims = [int(v) for v in args.mesh.split("x")]
@@ -47,8 +66,32 @@ def main():
     cap = args.prompt + args.gen + (cfg.num_prefix_tokens if cfg.modality == "vlm" else 0)
     eng = Engine(model, params,
                  EngineConfig(batch=args.batch, capacity=cap, policy=pol,
-                              temperature=args.temperature), mesh=mesh)
+                              temperature=args.temperature, layout=layout,
+                              pool_bytes=args.pool_bytes),
+                 mesh=mesh)
     key = jax.random.PRNGKey(1)
+
+    if args.mode == "continuous":
+        if cfg.modality != "text":
+            raise SystemExit("continuous mode drives text tokens")
+        sched = Scheduler(eng, prompt_pad=args.prompt)
+        n_req = args.requests or 2 * args.batch
+        for rid in range(n_req):
+            toks = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, rid), (args.prompt,), 0, cfg.vocab_size))
+            sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=args.gen))
+        results = sched.run_continuous()
+        st = sched.last_stats
+        line = (f"served {len(results)} requests ({st['tokens']} tokens) in "
+                f"{st['wall_s']:.2f}s; attend={st['attend_path']} "
+                f"layout={st['layout']}")
+        if "pool" in st:
+            p = st["pool"]
+            line += (f"; pool {p['used_pages']}/{p['used_pages'] + p['free_pages']}"
+                     f" pages used, {p['shared_pages']} shared")
+        print(line)
+        return
+
     if cfg.modality == "audio":
         batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt,
                                                     cfg.num_codebooks), 0, cfg.vocab_size)}

@@ -236,7 +236,8 @@ def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
 
 
 def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
-                     kind: str = "global", fused: str = "auto"):
+                     kind: str = "global", fused: str = "auto",
+                     block_tables=None):
     """One-token attention against a layer cache.
 
     x_t: [B, 1, d]; pos: int32 absolute position — scalar (all slots aligned)
@@ -254,7 +255,12 @@ def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
       "off"       — the portable :func:`repro.core.cache.attend` path.
     The choice is static (layout-based, never length-based) so wave and
     continuous modes share one numeric program per configuration.
-    Returns (out [B, 1, d], new_cache).
+
+    A :class:`~repro.core.cache.PagedGEARLayerCache` takes the same paths
+    with its pooled twins (``append_token_paged`` + ``gear_attend_paged`` /
+    ``attend_paged``); ``block_tables [B, C]`` is required then — it is
+    engine-owned metadata like ``pos``, threaded per call rather than
+    stored in the cache.  Returns (out [B, 1, d], new_cache).
     """
     B = x_t.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape((-1, 1)), (B, 1))
@@ -262,15 +268,31 @@ def attention_decode(cfg: ModelConfig, params, x_t, pos, cache, cache_cfg,
     k_t = jnp.squeeze(k, axis=1)  # [B, Hkv, Dh]
     v_t = jnp.squeeze(v, axis=1)
     q_t = jnp.squeeze(q, axis=1)  # [B, Hq, Dh]
-    new_cache = cache_lib.append_token(cache_cfg, cache, k_t, v_t)
+    scale = cfg.head_dim ** -0.5
     # NOTE: logit softcap is omitted on the cached-decode path (it only
     # matters for training stability); documented in DESIGN.md.
+    if isinstance(cache, cache_lib.PagedGEARLayerCache):
+        if block_tables is None:
+            raise ValueError("paged cache decode needs block_tables")
+        new_cache = cache_lib.append_token_paged(cache_cfg, cache,
+                                                 block_tables, k_t, v_t)
+        if fused != "off" and kernel_ops.fused_supported(cache_cfg):
+            out = kernel_ops.gear_attend_paged(
+                cache_cfg, new_cache, block_tables, q_t, scale=scale,
+                force_kernel=fused == "interpret",
+                interpret=fused == "interpret")
+        else:
+            out = cache_lib.attend_paged(cache_cfg, new_cache, block_tables,
+                                         q_t, scale)
+        out = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x_t.dtype)
+        return out, new_cache
+    new_cache = cache_lib.append_token(cache_cfg, cache, k_t, v_t)
     if fused != "off" and kernel_ops.fused_supported(cache_cfg):
         out = kernel_ops.gear_attend(cache_cfg, new_cache, q_t,
-                                     scale=cfg.head_dim ** -0.5,
+                                     scale=scale,
                                      force_kernel=fused == "interpret",
                                      interpret=fused == "interpret")
     else:
-        out = cache_lib.attend(cache_cfg, new_cache, q_t, scale=cfg.head_dim ** -0.5)
+        out = cache_lib.attend(cache_cfg, new_cache, q_t, scale=scale)
     out = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x_t.dtype)
     return out, new_cache

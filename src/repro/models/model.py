@@ -95,17 +95,21 @@ class Model:
 
     def decode_step(self, params, token_batch: dict, caches, pos,
                     policy: CompressionPolicy, capacity: int,
-                    fused: str = "auto"):
+                    fused: str = "auto", block_tables=None):
         """One decode step.  ``pos`` is a scalar (all slots aligned) or a
         per-slot ``[B]`` vector of absolute positions (continuous batching).
         ``fused``: GEAR attend path — "auto" (fused kernel where the layout
         supports it, ragged-aware), "interpret" (force the Pallas kernel in
-        interpret mode), or "off" (portable jnp attend)."""
+        interpret mode), or "off" (portable jnp attend).  ``block_tables``
+        is required when ``caches`` was built with ``layout="paged"``."""
         return tfm.decode_tokens(self.cfg, params, token_batch, caches, pos,
-                                 policy, capacity, fused=fused)
+                                 policy, capacity, fused=fused,
+                                 block_tables=block_tables)
 
-    def init_caches(self, policy: CompressionPolicy, batch: int, capacity: int):
-        return tfm.init_caches(self.cfg, policy, batch, capacity)
+    def init_caches(self, policy: CompressionPolicy, batch: int, capacity: int,
+                    layout: str = "dense", pool_pages: int = 0):
+        return tfm.init_caches(self.cfg, policy, batch, capacity,
+                               layout=layout, pool_pages=pool_pages)
 
 
 def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:

@@ -148,24 +148,49 @@ def cache_cfg_for(cfg: ModelConfig, kind: str, policy: CompressionPolicy,
         kind="fp16" if policy.is_fp16 else "gear")
 
 
-def _unit_cache(cfg: ModelConfig, kind: str, policy, batch, capacity, dtype):
-    """Zero cache object for ONE layer of the given kind."""
+def _unit_cache(cfg: ModelConfig, kind: str, policy, batch, capacity, dtype,
+                layout: str = "dense", pool_pages: int = 0):
+    """Zero cache object for ONE layer of the given kind.
+
+    ``layout="paged"`` puts GEAR-compressible attention layers into the
+    pooled page layout (:class:`~repro.core.cache.PagedGEARLayerCache`,
+    ``pool_pages`` pages).  Window ring buffers, fp16 caches, and RWKV/SSM
+    recurrent state have no chunk decomposition and stay dense inside a
+    mixed tree — the documented fallback (DESIGN.md §5).
+    """
     if kind == "rwkv":
         return rwkv_lib.init_rwkv_state(cfg, batch, dtype)
     ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
-    c = cache_lib.init_layer_cache(ccfg, dtype)
+    if layout == "paged" and cache_lib.paged_supported(ccfg):
+        c = cache_lib.init_paged_layer_cache(ccfg, pool_pages, dtype)
+    else:
+        c = cache_lib.init_layer_cache(ccfg, dtype)
     if cfg.ssm and cfg.hybrid_parallel:
         return (c, ssm_lib.init_ssm_state(cfg, batch, dtype))
     return c
 
 
 def init_caches(cfg: ModelConfig, policy: CompressionPolicy, batch: int,
-                capacity: int, dtype=jnp.bfloat16):
-    """Tuple over pattern positions of caches stacked over repeats [R, ...]."""
+                capacity: int, dtype=jnp.bfloat16, layout: str = "dense",
+                pool_pages: int = 0):
+    """Tuple over pattern positions of caches stacked over repeats [R, ...].
+
+    ``layout="paged"`` gives every paged-capable position a page pool leaf
+    ``[R, pool_pages, ...]``: each repeat of each position has its own
+    pool, all addressed by ONE engine-owned block table ``[B, C]`` (page
+    id ``p`` means page ``p`` in every layer's pool — that is what makes
+    the allocator a single global byte-budgeted pool).
+    """
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"layout must be dense/paged, got {layout!r}")
+    if layout == "paged" and pool_pages < 2:
+        raise ValueError("paged layout needs pool_pages >= 2 "
+                         "(page 0 is the reserved zero page)")
     R = cfg.pattern_repeats
     out = []
     for kind in cfg.layer_pattern:
-        one = _unit_cache(cfg, kind, policy, batch, capacity, dtype)
+        one = _unit_cache(cfg, kind, policy, batch, capacity, dtype,
+                          layout=layout, pool_pages=pool_pages)
         out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
     return tuple(out)
 
@@ -208,7 +233,8 @@ def _apply_block_train(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
 
 
 def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
-                        batch, capacity, fused: str = "auto"):
+                        batch, capacity, fused: str = "auto",
+                        block_tables=None):
     if kind == "rwkv":
         h, cache = rwkv_lib.time_mix_decode(cfg, bp, apply_norm(x_t, bp["ln1"], "layernorm"), cache)
         x_t = x_t + h
@@ -220,7 +246,8 @@ def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
     ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
     xin = apply_norm(x_t, bp["ln1"], cfg.norm)
     h, attn_cache = attn_lib.attention_decode(cfg, bp["attn"], xin, pos, attn_cache,
-                                              ccfg, kind, fused=fused)
+                                              ccfg, kind, fused=fused,
+                                              block_tables=block_tables)
     if hybrid:
         h2, ssm_state = ssm_lib.ssm_decode(cfg, bp["ssm"], xin, ssm_state)
         h = (h + h2) * 0.5
@@ -417,14 +444,16 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
 
 def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
                   pos, policy: CompressionPolicy, capacity: int,
-                  fused: str = "auto"):
+                  fused: str = "auto", block_tables=None):
     """One decode step.  token_batch: {"tokens": [B, 1(...)]}.
 
     ``pos`` is a scalar int32 or a per-slot ``[B]`` vector (continuous
     batching: each batch row decodes at its own absolute position and its
     layer caches advance at their own per-slot lengths).  ``fused`` selects
     the GEAR attend path (see :func:`repro.models.attention.attention_decode`).
-    Returns (logits [B, 1, ...], new caches)."""
+    ``block_tables [B, C]`` is required when ``caches`` holds paged layers
+    (one table addresses every layer's pool); layers that stayed dense in a
+    mixed tree ignore it.  Returns (logits [B, 1, ...], new caches)."""
     x = embed_tokens(cfg, params, token_batch)
     B = x.shape[0]
 
@@ -434,7 +463,8 @@ def decode_tokens(cfg: ModelConfig, params, token_batch: dict, caches,
         for i, kind in enumerate(cfg.layer_pattern):
             x, nc = _apply_block_decode(cfg, unit_params[i], x, kind, pos,
                                         unit_caches[i], policy, B, capacity,
-                                        fused=fused)
+                                        fused=fused,
+                                        block_tables=block_tables)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

@@ -47,12 +47,23 @@ class PrefixMatch:
 
 
 class PrefixCache:
-    """Trie + store facade keyed on ``chunk``-token id chunks."""
+    """Trie + store facade keyed on ``chunk``-token id chunks.
 
-    def __init__(self, chunk: int, budget_bytes: int):
+    ``store`` is pluggable: the default :class:`ChunkStore` owns host-side
+    payload copies; the paged engine passes a
+    :class:`~repro.serving.pagedpool.PagePoolStore`, whose handles are pool
+    page ids — then an insert is a refcount bump (the chunk's device bytes
+    are already in the pool) and an eviction releases the page.  A custom
+    store may provide ``nbytes_of(payload)``, used instead of
+    :func:`payload_nbytes` so the trie's LRU budget prices entries in the
+    store's own byte units (exact page bytes for the pool).
+    """
+
+    def __init__(self, chunk: int, budget_bytes: int, store=None):
         self.chunk = int(chunk)
         self.trie = RadixTrie(budget_bytes)
-        self.store = ChunkStore()
+        self.store = ChunkStore() if store is None else store
+        self._nbytes_of = getattr(self.store, "nbytes_of", payload_nbytes)
         self.toks_saved = 0
 
     # ------------------------------------------------------------------
@@ -85,7 +96,7 @@ class PrefixCache:
         """
         keys = chunk_keys(tokens, self.chunk)[:start_chunk + len(payloads)]
         entries = ([None] * start_chunk
-                   + [(self.store.put(p), payload_nbytes(p)) for p in payloads])
+                   + [(self.store.put(p), self._nbytes_of(p)) for p in payloads])
         created, unused, evicted = self.trie.insert(keys, entries)
         for handle in unused:
             self.store.free(handle)
@@ -97,6 +108,28 @@ class PrefixCache:
         """Drop all cached chunks (keeps budget and stats counters)."""
         for handle in self.trie.clear():
             self.store.free(handle)
+
+    def evict_bytes(self, n_bytes: int) -> int:
+        """Evict least-recently-used unpinned entries until at least
+        ``n_bytes`` have been reclaimed (or nothing evictable remains).
+
+        The paged scheduler's deadlock valve: when every slot is idle, the
+        queue is non-empty, and admission still fails, the pool's free
+        pages are all pinned by the trie — reclaiming here turns trie
+        references back into allocatable pages.  Returns bytes reclaimed.
+        Implemented by temporarily lowering the trie's budget and running
+        its normal LRU eviction, so pinned-path protection and stats
+        behave exactly as budget-pressure evictions do.
+        """
+        before = self.trie.total_bytes
+        budget = self.trie.budget_bytes
+        self.trie.budget_bytes = max(before - n_bytes, 0)
+        try:
+            for handle in self.trie.evict_to_budget():
+                self.store.free(handle)
+        finally:
+            self.trie.budget_bytes = budget
+        return before - self.trie.total_bytes
 
     # ------------------------------------------------------------------
     @property

@@ -39,12 +39,22 @@ def payload_nbytes(payload) -> int:
 
 
 class ChunkStore:
-    """Handle-addressed payload store with exact byte accounting."""
+    """Handle-addressed payload store with exact byte accounting.
+
+    The store protocol the :class:`repro.prefixcache.PrefixCache` facade
+    drives — ``put``/``get``/``free`` plus the ``nbytes_of`` pricing hook —
+    is also implemented by :class:`repro.serving.pagedpool.PagePoolStore`,
+    where handles are pool page ids rather than host copies.
+    """
 
     def __init__(self):
         self._entries: dict[int, tuple[Any, int]] = {}
         self._next_handle = 0
         self.total_bytes = 0
+
+    @staticmethod
+    def nbytes_of(payload) -> int:
+        return payload_nbytes(payload)
 
     def __len__(self) -> int:
         return len(self._entries)

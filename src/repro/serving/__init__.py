@@ -1,0 +1,35 @@
+"""Public serving API.
+
+The blessed surface for building a GEAR-compressed serving stack — entry
+points (``repro.launch.serve``), benchmarks, and downstream users import
+from here rather than from the submodules:
+
+* :class:`Engine` / :class:`EngineConfig` with the typed knobs
+  :class:`AttendPath`, :class:`PrefillMode`, :class:`CacheLayout`
+  (plain strings still coerce, as a deprecation shim);
+* :class:`Scheduler` with :class:`Request` / :class:`Result` — wave and
+  continuous batching;
+* :class:`CacheView` (:class:`DenseCacheView` / :class:`PagedCacheView`)
+  — the slot-protocol facade the scheduler drives;
+* the paged pool primitives (:class:`PagePool`, :class:`PagePoolStore`,
+  :class:`PoolExhausted`, :func:`pages_needed`) for tooling that inspects
+  admission state.
+"""
+
+from repro.serving.engine import (AttendPath, CacheLayout, Engine,
+                                  EngineConfig, PrefillMode,
+                                  prefix_cache_unsupported_reason)
+from repro.serving.pagedpool import (PagePool, PagePoolStore, PoolExhausted,
+                                     pages_needed)
+from repro.serving.sampling import sample
+from repro.serving.scheduler import Request, Result, Scheduler
+from repro.serving.views import CacheView, DenseCacheView, PagedCacheView
+
+__all__ = [
+    "AttendPath", "PrefillMode", "CacheLayout",
+    "Engine", "EngineConfig", "prefix_cache_unsupported_reason",
+    "Scheduler", "Request", "Result",
+    "CacheView", "DenseCacheView", "PagedCacheView",
+    "PagePool", "PagePoolStore", "PoolExhausted", "pages_needed",
+    "sample",
+]

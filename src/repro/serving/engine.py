@@ -10,11 +10,25 @@ top (:mod:`repro.serving.scheduler`):
   a time with per-slot position vectors, and :meth:`Engine.prefill_slot`
   splices a fresh request's batch-1 cache into a live batch slot (the cache
   tree is donated, so the splice is an in-place batch-row write).
+
+Two cache layouts (:class:`CacheLayout`):
+
+* ``DENSE`` — every slot owns full-capacity per-slot arrays; admission is
+  slot-count-limited.
+* ``PAGED`` — compressed chunks live in a global pool of fixed-size pages
+  addressed through per-slot block tables (DESIGN.md §5,
+  :mod:`repro.serving.pagedpool`); admission is pool-bytes-limited, a
+  request reserves only the pages its own lifetime needs, and prefix-cache
+  hits share pages by refcount instead of copying.  Decode gathers pages
+  by table index inside the fused kernel grid
+  (:func:`repro.kernels.gear_decode.gear_decode_paged`), and the layout is
+  bit-identical to the dense slot cache under the zero-page invariant.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from typing import Any
 
@@ -31,9 +45,55 @@ from repro.models.model import Model
 from repro.models.transformer import cache_cfg_for
 from repro.prefixcache import PrefixCache
 from repro.prefixcache import store as pc_store
+from repro.serving.pagedpool import PagePool, PagePoolStore, pages_needed
 from repro.serving.sampling import sample
 
-__all__ = ["EngineConfig", "Engine", "prefix_cache_unsupported_reason"]
+__all__ = ["AttendPath", "PrefillMode", "CacheLayout", "EngineConfig",
+           "Engine", "prefix_cache_unsupported_reason"]
+
+
+class AttendPath(str, enum.Enum):
+    """GEAR decode/prefill attend kernel path.
+
+    ``AUTO`` — fused gear_attend where the cache layout supports it (Pallas
+    kernel on TPU, jnp oracle elsewhere; ragged-aware, so continuous
+    batching takes it too).  ``INTERPRET`` — force the Pallas kernel in
+    interpret mode (CI kernel lane).  ``OFF`` — portable jnp attend.
+    """
+    AUTO = "auto"
+    INTERPRET = "interpret"
+    OFF = "off"
+
+    __str__ = str.__str__
+
+
+class PrefillMode(str, enum.Enum):
+    """Prefill pipeline: ``MONOLITHIC`` (full-sequence attention, one
+    batched compression event per layer) or ``STREAMING`` (chunked
+    compress-as-you-go — O(compressed cache + one chunk) peak memory).
+    Both build bit-identical caches."""
+    MONOLITHIC = "monolithic"
+    STREAMING = "streaming"
+
+    __str__ = str.__str__
+
+
+class CacheLayout(str, enum.Enum):
+    """Serving cache layout: ``DENSE`` per-slot arrays or ``PAGED`` pooled
+    compressed-chunk pages behind per-slot block tables (DESIGN.md §5)."""
+    DENSE = "dense"
+    PAGED = "paged"
+
+    __str__ = str.__str__
+
+
+def _coerce(cls, value, knob: str, options: str):
+    """Enum coercion that keeps the legacy stringly error text, so existing
+    callers matching on e.g. ``"prefill_mode must be"`` keep passing."""
+    try:
+        return cls(value)
+    except ValueError:
+        raise ValueError(f"{knob} must be {options}, got {value!r}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,39 +104,54 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0
     eos_id: int = -1               # -1: never stop early
-    # GEAR decode-attend path: "auto" (fused gear_attend where the cache
-    # layout supports it — kernel on TPU, oracle elsewhere; ragged-aware so
-    # continuous batching takes it too), "interpret" (force the Pallas
-    # kernel in interpret mode — CI kernel lane), "off" (jnp cache.attend).
-    # The same knob selects the prefill kernel path (flash_prefill for
-    # monolithic attention, gear_compress/gear_attend_block for streaming).
-    fused: str = "auto"
-    # Prefill pipeline: "monolithic" (full-sequence attention then one
-    # batched compression event) or "streaming" (compress-as-you-go chunked
-    # pipeline — peak prefill memory is the compressed cache plus one chunk
-    # instead of the full FP16 history; both build bit-identical caches).
-    prefill_mode: str = "monolithic"
+    # GEAR decode-attend path (:class:`AttendPath`).  Plain strings
+    # ("auto"/"interpret"/"off") are coerced for back-compat.  The same
+    # knob selects the prefill kernel path (flash_prefill for monolithic
+    # attention, gear_compress/gear_attend_block for streaming).
+    fused: AttendPath = AttendPath.AUTO
+    # Prefill pipeline (:class:`PrefillMode`); strings are coerced.
+    prefill_mode: PrefillMode = PrefillMode.MONOLITHIC
     # Cross-request prefix cache (radix trie over compressed GEAR chunks,
     # repro.prefixcache): prefill_slot splices the longest cached
     # chunk-aligned prompt prefix into the slot and streams only the
     # suffix — bit-identical caches/logits vs a cold prefill.  Requires
     # prefill_mode="streaming" (the hit path attends the cached prefix in
     # compressed form, which is exactly streaming's numeric model) and a
-    # model whose every layer supports the streaming pipeline.
+    # model whose every layer supports the streaming pipeline.  Under the
+    # PAGED layout the trie's payloads are pool page ids, so a hit is a
+    # refcount bump — no chunk bytes are ever copied.
     prefix_cache: bool = False
     prefix_cache_bytes: int = 256 << 20   # trie LRU byte budget
+    # Cache layout (:class:`CacheLayout`); strings are coerced.  PAGED puts
+    # every GEAR-compressible attention layer's closed chunks into a global
+    # page pool; window/fp16/RWKV/SSM state stays dense inside the tree.
+    layout: CacheLayout = CacheLayout.DENSE
+    # PAGED pool sizing — set at most one.  ``pool_pages`` is the pool's
+    # page-axis length (including reserved zero page 0, matching
+    # ``init_caches(..., pool_pages=...)``); ``pool_bytes`` sizes the pool
+    # to a device byte budget (pages = pool_bytes // page_bytes).  Default
+    # (both 0): batch * n_chunks allocatable pages — the dense-equivalent
+    # worst case, useful for parity testing rather than memory savings.
+    pool_pages: int = 0
+    pool_bytes: int = 0
 
     def __post_init__(self):
-        if self.fused not in ("auto", "interpret", "off"):
-            raise ValueError(f"fused must be auto/interpret/off, got {self.fused!r}")
-        if self.prefill_mode not in ("monolithic", "streaming"):
-            raise ValueError(
-                f"prefill_mode must be monolithic/streaming, got {self.prefill_mode!r}")
-        if self.prefix_cache and self.prefill_mode != "streaming":
+        object.__setattr__(self, "fused", _coerce(
+            AttendPath, self.fused, "fused", "auto/interpret/off"))
+        object.__setattr__(self, "prefill_mode", _coerce(
+            PrefillMode, self.prefill_mode, "prefill_mode",
+            "monolithic/streaming"))
+        object.__setattr__(self, "layout", _coerce(
+            CacheLayout, self.layout, "layout", "dense/paged"))
+        if self.prefix_cache and self.prefill_mode is not PrefillMode.STREAMING:
             raise ValueError(
                 "prefix_cache requires prefill_mode='streaming': the hit "
                 "path attends the cached prefix in compressed form, so only "
                 "streaming cold prefills are bit-identical to warm ones")
+        if self.pool_pages and self.pool_bytes:
+            raise ValueError("set pool_pages OR pool_bytes, not both")
+        if self.layout is CacheLayout.DENSE and (self.pool_pages or self.pool_bytes):
+            raise ValueError("pool_pages/pool_bytes only apply to layout='paged'")
 
 
 def prefix_cache_unsupported_reason(cfg, policy: CompressionPolicy,
@@ -112,9 +187,14 @@ class Engine:
         self.cfg = model.cfg
         self.ecfg = ecfg
         self.mesh = mesh
+        self.layout = ecfg.layout
         cap = self._cap()
 
         if mesh is not None:
+            if self.layout is CacheLayout.PAGED:
+                raise NotImplementedError(
+                    "paged layout is single-host for now: the block tables "
+                    "are engine-owned host state (ROADMAP: sharded pool)")
             cache_abs = jax.eval_shape(
                 lambda: model.init_caches(ecfg.policy, ecfg.batch, cap))
             self._cache_shard = shd.shardings_for(
@@ -129,10 +209,19 @@ class Engine:
             lambda p, b: model.prefill(p, b, ecfg.policy, cap,
                                        prefill_mode=ecfg.prefill_mode,
                                        fused=ecfg.fused))
-        self._decode = jax.jit(
-            lambda p, tok, caches, pos: model.decode_step(
-                p, tok, caches, pos, ecfg.policy, cap, fused=ecfg.fused),
-            donate_argnums=(2,))
+        if self.layout is CacheLayout.PAGED:
+            self._init_paged(cap)
+            self._decode = jax.jit(
+                lambda p, tok, caches, pos, bt: model.decode_step(
+                    p, tok, caches, pos, ecfg.policy, cap, fused=ecfg.fused,
+                    block_tables=bt),
+                donate_argnums=(2,))
+        else:
+            self.pool = None
+            self._decode = jax.jit(
+                lambda p, tok, caches, pos: model.decode_step(
+                    p, tok, caches, pos, ecfg.policy, cap, fused=ecfg.fused),
+                donate_argnums=(2,))
         # Slot splice: write a batch-1 cache tree over batch row `slot` of the
         # live (donated) cache.  Cache leaves are stacked [R, B, ...], so the
         # batch dim is axis 1 on every leaf (incl. RWKV/SSM states); the
@@ -159,8 +248,10 @@ class Engine:
             reason = prefix_cache_unsupported_reason(self.cfg, ecfg.policy, cap)
             if reason is not None:
                 raise ValueError(f"prefix_cache unsupported here: {reason}")
+            store = (PagePoolStore(self.pool)
+                     if self.layout is CacheLayout.PAGED else None)
             self.prefix_cache = PrefixCache(ecfg.policy.buffer_size,
-                                            ecfg.prefix_cache_bytes)
+                                            ecfg.prefix_cache_bytes, store=store)
             self._cache_cfgs = [cache_cfg_for(self.cfg, kind, ecfg.policy, 1, cap)
                                 for kind in self.cfg.layer_pattern]
             # per-shape jitted programs for the hit path, keyed by the
@@ -176,6 +267,63 @@ class Engine:
                 lambda fresh, payloads: pc_store.splice_tree_chunks(
                     self._cache_cfgs, fresh, 0, payloads))
 
+    # -- paged-layout setup --------------------------------------------
+    def _init_paged(self, cap: int) -> None:
+        ecfg = self.ecfg
+        if ecfg.policy.is_fp16:
+            raise ValueError(
+                "paged layout requires a compressed (GEAR) policy: fp16 "
+                "caches have no chunk pages to pool")
+        if self.cfg.ssm and self.cfg.hybrid_parallel:
+            raise NotImplementedError(
+                "hybrid SSM recurrent state is not chunk-decomposable; "
+                "serve it with layout='dense'")
+        nb = ecfg.policy.buffer_size
+        self._n_chunks = cap // nb
+        # batch-1 per-position cache configs; which positions are pooled
+        # mirrors transformer._unit_cache exactly (window/fp16/rwkv dense)
+        self._pos_cfgs1 = [
+            None if kind == "rwkv"
+            else cache_cfg_for(self.cfg, kind, ecfg.policy, 1, cap)
+            for kind in self.cfg.layer_pattern]
+        self._paged_flags = [
+            ccfg is not None and cache_lib.paged_supported(ccfg)
+            for ccfg in self._pos_cfgs1]
+        if not any(self._paged_flags):
+            raise ValueError(
+                "paged layout: no GEAR-compressible attention layer in "
+                f"pattern {self.cfg.layer_pattern!r}")
+        # one page = one chunk across the WHOLE model: R repeats of every
+        # pooled position contribute their per-layer page cost
+        R = self.cfg.pattern_repeats
+        self._page_bytes = R * sum(
+            cache_lib.page_nbytes(ccfg)
+            for ccfg, flag in zip(self._pos_cfgs1, self._paged_flags) if flag)
+        if ecfg.pool_pages:
+            n_pages = ecfg.pool_pages
+        elif ecfg.pool_bytes:
+            n_pages = ecfg.pool_bytes // self._page_bytes + 1
+        else:
+            n_pages = ecfg.batch * self._n_chunks + 1   # dense-equivalent
+        if n_pages < 2:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot hold page 0 + one chunk "
+                f"(page_bytes={self._page_bytes}; raise pool_bytes/pool_pages)")
+        self._n_pages = n_pages
+        self._paged_splice_fns: dict[int, Any] = {}
+        self._new_pool()
+
+    def _new_pool(self) -> None:
+        """Fresh allocator + device block table (and, because trie payloads
+        are page ids into the pool being discarded, a fresh prefix trie)."""
+        self.pool = PagePool(self._n_pages, self.ecfg.batch, self._n_chunks,
+                             self._page_bytes)
+        self._bt = jnp.asarray(self.pool.block_tables)
+        if getattr(self, "prefix_cache", None) is not None:
+            self.prefix_cache = PrefixCache(self.ecfg.policy.buffer_size,
+                                            self.ecfg.prefix_cache_bytes,
+                                            store=PagePoolStore(self.pool))
+
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
         return (self.ecfg.capacity + nb - 1) // nb * nb
@@ -188,17 +336,24 @@ class Engine:
         (no layer qualifies: fp16/window caches, unsupported layouts, or
         ``fused="off"``).  Checks every kind in the model's layer pattern —
         local/window layers never fuse, so a model needs at least one
-        GEAR-layout attention layer to report a fused path."""
+        GEAR-layout attention layer to report a fused path.  The paged
+        layout shares the dense kernel constraint (the paged kernel gathers
+        pages by block-table index but runs the same compute body)."""
         fused_any = any(
             kernel_ops.fused_supported(cache_cfg_for(
                 self.cfg, kind, self.ecfg.policy, self.ecfg.batch, self._cap()))
             for kind in self.cfg.layer_pattern if kind != "rwkv")
-        if self.ecfg.fused == "off" or not fused_any:
+        if self.ecfg.fused is AttendPath.OFF or not fused_any:
             return "xla"
-        return "fused-interpret" if self.ecfg.fused == "interpret" else "fused"
+        return ("fused-interpret" if self.ecfg.fused is AttendPath.INTERPRET
+                else "fused")
 
     # ------------------------------------------------------------------
     def prefill(self, batch: dict):
+        if self.layout is CacheLayout.PAGED:
+            raise NotImplementedError(
+                "full-batch wave prefill is dense-only; paged engines serve "
+                "through Engine.prefill_slot / Scheduler.run_continuous")
         logits, caches = self._prefill(self.params, batch)
         if self._cache_shard is not None:
             caches = jax.device_put(caches, self._cache_shard)
@@ -206,11 +361,15 @@ class Engine:
 
     def decode(self, token_batch: dict, caches, pos):
         """One decode step.  ``pos``: scalar or per-slot [B] int32 vector."""
+        if self.layout is CacheLayout.PAGED:
+            return self._decode(self.params, token_batch, caches,
+                                jnp.asarray(pos, jnp.int32), self._bt)
         return self._decode(self.params, token_batch, caches,
                             jnp.asarray(pos, jnp.int32))
 
     # -- slot-level continuous batching --------------------------------
-    def prefill_slot(self, batch1: dict, caches, slot: int, admit: bool = True):
+    def prefill_slot(self, batch1: dict, caches, slot: int, admit: bool = True,
+                     reserve_tokens: int | None = None):
         """Prefill ONE request (batch-1 inputs) and splice it into ``slot``.
 
         Returns (logits [1, 1, ...] for the request's last prompt position,
@@ -231,7 +390,20 @@ class Engine:
         cold path (DESIGN.md §4).  ``admit`` is the scheduler's admission
         policy: when True the prompt's newly closed chunks are inserted
         back into the trie after prefill.
+
+        PAGED layout: the slot first reserves its lifetime's pages from the
+        pool — ``reserve_tokens`` (prompt + generation budget; defaults to
+        full capacity) right-sizes the reservation, which is where paged
+        concurrency comes from.  Prefix-cache hits arrive as shared page
+        ids (refcount bump, no copy); fresh pages are zeroed before the
+        block-table row exposes them and the prompt's closed chunks are
+        scattered in.  Raises :class:`~repro.serving.pagedpool.PoolExhausted`
+        — with no device work done — when the pool cannot cover the
+        reservation; the scheduler queues and retries.
         """
+        if self.layout is CacheLayout.PAGED:
+            return self._prefill_slot_paged(batch1, caches, slot, admit,
+                                            reserve_tokens)
         if self.prefix_cache is None:
             logits, one = self._prefill(self.params, batch1)
             return logits, self._splice_donate_one(caches, one,
@@ -259,6 +431,116 @@ class Engine:
             self.prefix_cache.release(match)
         return logits, self._splice_donate_one(caches, one,
                                                jnp.asarray(slot, jnp.int32))
+
+    def _prefill_slot_paged(self, batch1, caches, slot, admit, reserve_tokens):
+        nb = self.ecfg.policy.buffer_size
+        cap = self._cap()
+        plen = self._prompt_len(batch1)
+        n_closed = plen // nb                 # chunks the prompt closes
+        reserve = cap if reserve_tokens is None else min(int(reserve_tokens), cap)
+        n_total = max(pages_needed(max(reserve, plen), nb), n_closed)
+
+        match, n_hit, shared = None, 0, []
+        if self.prefix_cache is not None:
+            tokens = np.asarray(batch1["tokens"][0])
+            match = self.prefix_cache.match(
+                tokens, max_chunks=max((plen - 1) // nb, 0))
+            n_hit = match.n_chunks
+            shared = [int(p) for p in match.payloads]   # payloads ARE page ids
+        try:
+            # splicing over a live slot discards its previous request (the
+            # dense layout overwrites the row; here we release its pages)
+            if self.pool.slot_pages(slot).size:
+                self.pool.release_slot(slot)
+            # host-side reservation FIRST — PoolExhausted costs no device work
+            fresh = self.pool.admit(slot, n_total, shared=shared)
+            if n_hit:
+                one1 = self._gather_scaffold(
+                    caches, self._fresh_batch1(),
+                    jnp.asarray(shared, jnp.int32))
+                suffix = {"tokens": jnp.asarray(tokens[None, n_hit * nb:],
+                                                jnp.int32)}
+                logits, one = self._suffix_fn(n_hit)(self.params, suffix, one1)
+            else:
+                logits, one = self._prefill(self.params, batch1)
+            n_sc = n_closed - n_hit
+            caches = self._paged_splice_fn(n_hit)(
+                caches, one,
+                jnp.asarray(fresh[n_sc:], jnp.int32),   # reserved: zero
+                jnp.asarray(fresh[:n_sc], jnp.int32),   # closed: scatter
+                jnp.asarray(slot, jnp.int32))
+            self._bt = jnp.asarray(self.pool.block_tables)
+            if self.prefix_cache is not None and admit and n_closed > n_hit:
+                row = self.pool.block_tables[slot]
+                self.prefix_cache.insert(
+                    tokens, [int(p) for p in row[n_hit:n_closed]],
+                    start_chunk=n_hit)
+        finally:
+            if match is not None:
+                self.prefix_cache.release(match)
+        return logits, caches
+
+    def _paged_splice_fn(self, c_lo: int):
+        """Jitted paged slot splice: zero the slot's reserved pages, scatter
+        the batch-1 prefill's closed chunks ``[c_lo, c_lo + n_sc)`` into its
+        fresh pages, and row-write the streaming buffer / length (dense
+        positions in a mixed tree splice whole, as before).  Keyed by the
+        prefix chunk offset; jit re-specializes on the page-count shapes."""
+        fn = self._paged_splice_fns.get(c_lo)
+        if fn is None:
+            def impl(caches, one, zero_pages, sc_pages, slot):
+                n_sc = sc_pages.shape[0]
+                out = []
+                for i, flag in enumerate(self._paged_flags):
+                    if not flag:
+                        out.append(cache_lib.splice_slot(
+                            caches[i], one[i], slot, axis=1))
+                        continue
+                    ccfg1 = self._pos_cfgs1[i]
+
+                    def upd(lyr, one_lyr, ccfg1=ccfg1):
+                        lyr = cache_lib.zero_pool_pages(ccfg1, lyr, zero_pages)
+                        if n_sc:
+                            chunks = cache_lib.extract_prefix_chunks(
+                                ccfg1, one_lyr, n_sc, c_lo)
+                            lyr = cache_lib.scatter_pool_chunks(
+                                ccfg1, lyr, sc_pages, chunks)
+                        return lyr
+
+                    lyr = jax.vmap(upd)(caches[i], one[i])   # over repeats R
+                    sub = cache_lib.splice_slot(
+                        {"buf_k": lyr.buf_k, "buf_v": lyr.buf_v,
+                         "length": lyr.length},
+                        {"buf_k": one[i].buf_k, "buf_v": one[i].buf_v,
+                         "length": one[i].length},
+                        slot, axis=1)
+                    out.append(dataclasses.replace(lyr, **sub))
+                return tuple(out)
+
+            fn = jax.jit(impl, donate_argnums=(0,))
+            self._paged_splice_fns[c_lo] = fn
+        return fn
+
+    def _gather_scaffold_impl(self, caches, fresh, pages):
+        """Trace: gather prefix pages out of the pool into the batch-1 dense
+        scaffold the suffix prefill runs over — the paged twin of the dense
+        engine's host-payload ``_splice_prefix``."""
+        n_hit = pages.shape[0]
+        per_pos = []
+        for i, flag in enumerate(self._paged_flags):
+            ccfg1 = self._pos_cfgs1[i]
+            per_pos.append(jax.vmap(
+                lambda lyr, ccfg1=ccfg1: cache_lib.gather_pool_chunks(
+                    ccfg1, lyr, pages))(caches[i]))
+        payloads = [tuple(p[c] for p in per_pos) for c in range(n_hit)]
+        return pc_store.splice_tree_chunks(self._cache_cfgs, fresh, 0, payloads)
+
+    def _gather_scaffold(self, caches, fresh, pages):
+        # prefix_cache requires every layer paged-capable, so per_pos covers
+        # all positions; jit re-specializes per distinct page count
+        if not hasattr(self, "_gather_fn"):
+            self._gather_fn = jax.jit(self._gather_scaffold_impl)
+        return self._gather_fn(caches, fresh, pages)
 
     def _fresh_batch1(self):
         """Memoized empty batch-1 cache tree (read-only — splices copy out
@@ -299,9 +581,46 @@ class Engine:
         return fn
 
     def reset_slot(self, caches, slot: int):
-        """Return ``caches`` with batch row ``slot`` cleared to empty state."""
+        """Return ``caches`` with batch row ``slot`` cleared to empty state.
+
+        PAGED: releases the slot's block-table row back to the pool (pure
+        host refcounting — freed pages are re-zeroed at their NEXT
+        admission, so release does no device work beyond the buffer/length
+        row clear)."""
+        if self.layout is CacheLayout.PAGED:
+            self.pool.release_slot(slot)
+            self._bt = jnp.asarray(self.pool.block_tables)
+            if not hasattr(self, "_paged_reset_fn"):
+                def impl(caches, fresh1, slot):
+                    out = []
+                    for i, flag in enumerate(self._paged_flags):
+                        if not flag:
+                            out.append(cache_lib.splice_slot(
+                                caches[i], fresh1[i], slot, axis=1))
+                            continue
+                        sub = cache_lib.splice_slot(
+                            {"buf_k": caches[i].buf_k, "buf_v": caches[i].buf_v,
+                             "length": caches[i].length},
+                            {"buf_k": fresh1[i].buf_k, "buf_v": fresh1[i].buf_v,
+                             "length": fresh1[i].length},
+                            slot, axis=1)
+                        out.append(dataclasses.replace(caches[i], **sub))
+                    return tuple(out)
+                self._paged_reset_fn = jax.jit(impl, donate_argnums=(0,))
+            return self._paged_reset_fn(caches, self._fresh_batch1(),
+                                        jnp.asarray(slot, jnp.int32))
         return self._splice(caches, self._fresh_batch1(),
                             jnp.asarray(slot, jnp.int32))
+
+    def reclaim_pages(self, n_pages: int) -> int:
+        """Evict prefix-trie entries until ``n_pages`` pool pages came free
+        (or nothing evictable remains).  The scheduler's deadlock valve:
+        with every slot idle, the only references keeping pages off the
+        free list are the trie's.  Returns pages actually reclaimed."""
+        if self.pool is None or self.prefix_cache is None:
+            return 0
+        freed = self.prefix_cache.evict_bytes(n_pages * self.pool.page_bytes)
+        return freed // self.pool.page_bytes
 
     # ------------------------------------------------------------------
     def generate(self, batch: dict, max_new_tokens: int, key=None, active=None):
@@ -309,6 +628,8 @@ class Engine:
 
         ``active``: optional bool mask [B] of slots holding real requests;
         padded copy slots are excluded from the throughput accounting.
+        Dense-layout only — paged engines serve through continuous batching
+        (:meth:`repro.serving.scheduler.Scheduler.run_continuous`).
         """
         key = key if key is not None else jax.random.PRNGKey(0)
         cfg, ecfg = self.cfg, self.ecfg
@@ -368,10 +689,28 @@ class Engine:
         return n
 
     def init_caches(self):
+        if self.layout is CacheLayout.PAGED:
+            # a fresh tree zeroes the pool device-side, so the allocator
+            # (and the trie, whose payloads are ids into the old pool)
+            # must restart with it
+            self._new_pool()
+            return self.model.init_caches(self.ecfg.policy, self.ecfg.batch,
+                                          self._cap(), layout="paged",
+                                          pool_pages=self._n_pages)
         caches = self.model.init_caches(self.ecfg.policy, self.ecfg.batch, self._cap())
         if self._cache_shard is not None:
             caches = jax.device_put(caches, self._cache_shard)
         return caches
+
+    def new_view(self):
+        """Blessed slot-API facade over a fresh cache tree
+        (:class:`repro.serving.views.CacheView`): the scheduler drives the
+        view instead of threading raw trees through free functions."""
+        from repro.serving.views import DenseCacheView, PagedCacheView
+        caches = self.init_caches()
+        if self.layout is CacheLayout.PAGED:
+            return PagedCacheView(self, caches)
+        return DenseCacheView(self, caches)
 
     @staticmethod
     def cache_nbytes(caches) -> int:

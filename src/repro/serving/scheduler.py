@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
+from repro.serving.pagedpool import PoolExhausted, pages_needed
 from repro.serving.sampling import sample
 
 __all__ = ["Request", "Result", "Scheduler"]
@@ -84,23 +85,40 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.last_stats: dict = {}
 
-    def submit(self, req: Request) -> None:
-        # A request's whole lifetime must fit the engine's cache capacity:
-        # prompt_pad tokens of prefill (+ VLM prefix) plus one appended token
-        # per decode step (the first generated token comes from prefill).
-        # Past capacity the GEAR streaming buffer would ring-wrap and corrupt
-        # the slot silently, so reject at submit time.
-        if req.max_new_tokens < 1:
-            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+    def _need_tokens(self, req: Request) -> int:
+        """Cache tokens a request's whole lifetime holds: prompt_pad tokens
+        of prefill (+ VLM prefix) plus one appended token per decode step
+        (the first generated token comes from prefill)."""
         prefix = (self.engine.cfg.num_prefix_tokens
                   if self.engine.cfg.modality == "vlm" else 0)
-        need = self.prompt_pad + prefix + req.max_new_tokens - 1
+        return self.prompt_pad + prefix + req.max_new_tokens - 1
+
+    def submit(self, req: Request) -> None:
+        # A request's whole lifetime must fit the engine's cache capacity:
+        # past capacity the GEAR streaming buffer would ring-wrap and corrupt
+        # the slot silently, so reject at submit time.  A paged engine is
+        # additionally bounded by its pool — reject requests that could
+        # never be admitted even with every page free (transient pressure,
+        # by contrast, just queues; see run_continuous).
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+        need = self._need_tokens(req)
         cap = self.engine._cap()
         if need > cap:
             raise ValueError(
                 f"request {req.rid}: prompt_pad {self.prompt_pad} + budget "
                 f"{req.max_new_tokens} needs {need} cache tokens but engine "
                 f"capacity is {cap}")
+        pool = self.engine.pool
+        if pool is not None:
+            pages = pages_needed(need, self.engine.ecfg.policy.buffer_size)
+            most = min(pool.n_pages - 1, pool.n_chunks)
+            if pages > most:
+                raise ValueError(
+                    f"request {req.rid}: needs {pages} pool pages but the "
+                    f"engine can ever allocate at most {most} to one slot "
+                    f"({pool.n_pages - 1} allocatable, {pool.n_chunks} "
+                    "block-table entries)")
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -150,10 +168,14 @@ class Scheduler:
         key = jax.random.PRNGKey(0)
 
         results: list[Result] = []
+        # the view owns the live cache tree and answers admission for both
+        # layouts; dense admission is slot-count-limited (can_admit always
+        # True), paged admission is pool-bytes-limited
+        view = eng.new_view()
         # engine prefix-cache counters are lifetime-cumulative; snapshot so
         # last_stats reports THIS run's rates, like every other field in it
+        # (a paged engine's new_view re-keys the trie, so snapshot AFTER)
         pstats0 = eng.prefix_cache.stats if eng.prefix_cache is not None else None
-        caches = eng.init_caches()
         pos = np.zeros(B, np.int32)        # per-slot absolute decode position
         budget = np.zeros(B, np.int32)     # per-slot remaining-token budget
         done = np.ones(B, bool)            # per-slot idle flag
@@ -178,13 +200,21 @@ class Scheduler:
             done[s] = True
             cur[s] = 0
 
-        def splice(s: int, caches):
+        def splice(s: int) -> bool:
             r = self.queue.popleft()
             prompt = _pad(r.tokens, self.prompt_pad)[None]
             t0 = time.time()
-            logits, caches = eng.prefill_slot(
-                {"tokens": jnp.asarray(prompt, jnp.int32)}, caches, s,
-                admit=self.prefix_admission == "all")
+            try:
+                logits = view.prefill_slot(
+                    {"tokens": jnp.asarray(prompt, jnp.int32)}, s,
+                    admit=self.prefix_admission == "all",
+                    reserve_tokens=self._need_tokens(r))
+            except PoolExhausted:
+                # can_admit raced another consumer of the pool (e.g. trie
+                # admission of a concurrent splice): requeue, not crash —
+                # pages come back when a running slot finishes
+                self.queue.appendleft(r)
+                return False
             first = int(np.asarray(
                 sample(logits[:, -1], key, eng.ecfg.temperature, eng.ecfg.top_k))[0])
             prefill_s[s] = time.time() - t0
@@ -198,24 +228,39 @@ class Scheduler:
             done[s] = False
             if r.max_new_tokens <= 1 or (eos >= 0 and first == eos):
                 finish(s)
-            return caches
+            return True
 
         while self.queue or not bool(done.all()):
             for s in range(B):
-                while done[s] and self.queue:
-                    caches = splice(s, caches)
+                while (done[s] and self.queue
+                       and view.can_admit(self._need_tokens(self.queue[0]))):
+                    if not splice(s):
+                        break
                 if done[s] and not fresh[s]:
-                    # queue drained: clear the slot so it idles on an empty
-                    # cache row instead of decoding stale request state
-                    caches = eng.reset_slot(caches, s)
+                    # queue drained (or head inadmissible): clear the slot so
+                    # it idles on an empty cache row instead of decoding
+                    # stale request state — and, paged, releases its pages
+                    view.reset_slot(s)
                     fresh[s] = True
                     pos[s] = 0
                     cur[s] = 0
             if bool(done.all()):
-                break
+                if not self.queue:
+                    break
+                # every slot is idle yet the head request was not admitted:
+                # the pool's free pages are pinned by the prefix trie.
+                # Reclaim (LRU-evict trie entries back into allocatable
+                # pages) and retry; submit()'s bound guarantees the request
+                # fits an empty pool, so a second failure is a real bug.
+                need = self._need_tokens(self.queue[0])
+                if view.reclaim(need) or view.can_admit(need):
+                    continue
+                raise RuntimeError(
+                    f"request {self.queue[0].rid}: inadmissible on an idle "
+                    "engine even after reclaiming the prefix cache")
             t0 = time.time()
             tb = {"tokens": jnp.asarray(cur[:, None])}
-            logits, caches = eng.decode(tb, caches, jnp.asarray(pos))
+            logits = view.decode(tb, pos)
             key = jax.random.fold_in(key, steps)
             nxt = np.asarray(sample(logits[:, -1], key,
                                     eng.ecfg.temperature, eng.ecfg.top_k))
@@ -237,7 +282,15 @@ class Scheduler:
             "decode_steps": steps,
             "tokens": int(sum(len(r.tokens) for r in results)),
             "attend_path": eng.attend_path,
+            "layout": str(eng.ecfg.layout),
         }
+        if eng.pool is not None:
+            self.last_stats["pool"] = {
+                **eng.pool.stats,
+                "page_bytes": eng.pool.page_bytes,
+                "free_pages": eng.pool.free_pages,
+                "used_pages": eng.pool.used_pages,
+            }
         if pstats0 is not None:
             pstats = eng.prefix_cache.stats
             hit = pstats["hit_chunks"] - pstats0["hit_chunks"]

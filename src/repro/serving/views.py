@@ -1,0 +1,109 @@
+"""Slot-view facade over the engine's cache tree.
+
+:class:`CacheView` is the blessed serving surface for slot-level
+continuous batching: it owns one live cache tree and wraps the engine's
+slot protocol (``prefill_slot`` / ``reset_slot`` / ``decode``) plus the
+admission question (``can_admit``) behind one object, so the scheduler no
+longer threads raw cache pytrees through free functions.  The raw-tree
+engine methods remain for back-compat, but serving code should go through
+a view — it is the only API that works identically for both layouts:
+
+* :class:`DenseCacheView` — per-slot full-capacity arrays; admission is
+  slot-count-limited, so ``can_admit`` is always True (a free slot IS the
+  capacity).
+* :class:`PagedCacheView` — the pooled page layout (DESIGN.md §5):
+  ``can_admit`` asks the page allocator whether the request's lifetime
+  reservation fits, ``prefill_slot`` right-sizes that reservation with
+  ``reserve_tokens``, and ``reclaim`` turns prefix-trie references back
+  into allocatable pages when admission deadlocks on an idle engine.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.serving.pagedpool import pages_needed
+
+__all__ = ["CacheView", "DenseCacheView", "PagedCacheView"]
+
+
+@runtime_checkable
+class CacheView(Protocol):
+    """One live cache tree + the slot protocol the scheduler drives."""
+
+    caches: Any
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Would a request whose lifetime holds ``n_tokens`` be admitted now?"""
+        ...
+
+    def prefill_slot(self, batch1: dict, slot: int, admit: bool = True,
+                     reserve_tokens: int | None = None):
+        """Prefill one request into ``slot``; returns its last-position logits."""
+        ...
+
+    def reset_slot(self, slot: int) -> None: ...
+
+    def decode(self, token_batch: dict, pos):
+        """One decode step over all slots; returns logits."""
+        ...
+
+    def reclaim(self, n_tokens: int) -> bool:
+        """Try to free enough backing store to admit ``n_tokens``; True if
+        ``can_admit`` now holds."""
+        ...
+
+
+class _ViewBase:
+    def __init__(self, engine, caches):
+        self.engine = engine
+        self.caches = caches
+
+    def prefill_slot(self, batch1: dict, slot: int, admit: bool = True,
+                     reserve_tokens: int | None = None):
+        logits, self.caches = self.engine.prefill_slot(
+            batch1, self.caches, slot, admit=admit,
+            reserve_tokens=reserve_tokens)
+        return logits
+
+    def reset_slot(self, slot: int) -> None:
+        self.caches = self.engine.reset_slot(self.caches, slot)
+
+    def decode(self, token_batch: dict, pos):
+        logits, self.caches = self.engine.decode(
+            token_batch, self.caches, jnp.asarray(pos, jnp.int32))
+        return logits
+
+
+class DenseCacheView(_ViewBase):
+    """Dense per-slot layout: a free slot always has full capacity."""
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return True
+
+    def reclaim(self, n_tokens: int) -> bool:
+        return False           # nothing to reclaim; admission never fails
+
+
+class PagedCacheView(_ViewBase):
+    """Pooled page layout: admission is pool-bytes-limited.
+
+    ``can_admit`` is conservative — it prices the request with zero prefix
+    sharing (hits only shrink the fresh-page need), so a True answer
+    guarantees :meth:`prefill_slot` will not raise
+    :class:`~repro.serving.pagedpool.PoolExhausted`.
+    """
+
+    def _pages(self, n_tokens: int) -> int:
+        return pages_needed(n_tokens, self.engine.ecfg.policy.buffer_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.engine.pool.can_admit(self._pages(n_tokens))
+
+    def reclaim(self, n_tokens: int) -> bool:
+        deficit = self._pages(n_tokens) - self.engine.pool.free_pages
+        if deficit > 0:
+            self.engine.reclaim_pages(deficit)
+        return self.can_admit(n_tokens)
