@@ -96,7 +96,7 @@ def _decode_tok_per_s(eng, iters: int, seed: int = 7) -> float:
                for _ in range(TP_REQ)]
     rates = []
     for it in range(iters + 1):
-        sched = Scheduler(eng, prompt_pad=TP_PROMPT)
+        sched = Scheduler(eng)
         for rid, toks in enumerate(prompts):
             sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=TP_GEN))
         results = sched.run_continuous()

@@ -17,7 +17,10 @@ prefill (asserted per request in-bench).
   (benchmarks/check_regression.py): ``prefix/prefill_tok_per_s_*`` under
   the throughput rule, ``prefix/cached_over_off`` as the
   machine-independent ratio guard, ``prefix/hit_rate`` +
-  ``prefix/prefill_toks_saved`` under the exact-floor rule.
+  ``prefix/prefill_toks_saved`` under the exact-floor rule, and
+  ``prefix/mixed_hit_rate`` + ``prefix/mixed_toks_saved`` pinning that RAW
+  mixed-length prompts (unaligned suffixes, engine-side length bucketing)
+  still hit the shared chunks at bit-exact warm ≡ cold logits.
 * **full**: additionally sweeps the shared-prefix fraction to show the
   near-linear prefill-time reduction.
 """
@@ -56,6 +59,25 @@ def _workload(shared_chunks: int, seed: int = 0) -> list[np.ndarray]:
     shared = rng.randint(0, BENCH_CFG.vocab_size, size=shared_chunks * nb)
     return [np.concatenate([shared, rng.randint(0, BENCH_CFG.vocab_size,
                                                 size=PROMPT_LEN - shared.size)])
+            for _ in range(N_REQ)]
+
+
+def _workload_mixed(shared_chunks: int, seed: int = 3) -> list[np.ndarray]:
+    """Mixed-length variant: the same ~80%-shared system prompt but RAW
+    per-request suffix lengths in [n_b/2, n_b) — deliberately not
+    chunk-aligned, so every request takes the engine's length-bucketed
+    (padded-tail) prefill path while the trie still matches the shared
+    chunks.  All lengths fall in ONE bucket on purpose: chunks compressed
+    by different-shaped jit programs can differ in the last ulp (XLA
+    codegen is per-shape), so the bitwise warm ≡ cold gate is only valid
+    when the trie's seeding request and the cold reference share a bucket
+    (DESIGN.md §4; cross-bucket reuse is near-lossless, not bit-exact)."""
+    nb = POLICY.buffer_size
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, BENCH_CFG.vocab_size, size=shared_chunks * nb)
+    return [np.concatenate([shared,
+                            rng.randint(0, BENCH_CFG.vocab_size,
+                                        size=rng.randint(nb // 2, nb))])
             for _ in range(N_REQ)]
 
 
@@ -140,6 +162,39 @@ def run(smoke: bool = False):
     assert toks_saved_run == (N_REQ - 1) * SHARED_CHUNKS * POLICY.buffer_size
     assert speedup >= SPEEDUP_FLOOR, (
         f"prefix cache speedup {speedup:.2f}x below floor {SPEEDUP_FLOOR}x")
+
+    # ---- mixed-length workload: same shared prefix, raw unaligned suffix
+    # lengths — the length-bucketed prefill path must keep warm ≡ cold
+    # bit-exact AND keep hitting the shared chunks (ISSUE 8 acceptance)
+    nb = POLICY.buffer_size
+    mixed = _workload_mixed(SHARED_CHUNKS)
+    _, mixed_cold = _measure(eng_off, mixed, 1)
+    m0 = eng_on.prefix_cache.stats
+    _measure(eng_on, mixed, 1, check_against=mixed_cold)
+    m1 = eng_on.prefix_cache.stats
+
+    m_lookups = m1["lookup_chunks"] - m0["lookup_chunks"]
+    m_hits = m1["hit_chunks"] - m0["hit_chunks"]
+    mixed_hit_rate = m_hits / max(m_lookups, 1)
+    # per run: request 1 cold, requests 2..N each hit exactly the shared
+    # chunks (their raw suffixes diverge); eligible chunk counts vary with
+    # each prompt's raw length, so derive the expectation from the workload
+    elig = [(len(p) - 1) // nb for p in mixed]
+    want_mixed = (N_REQ - 1) * SHARED_CHUNKS / sum(elig)
+    mixed_saved_run = (m1["prefill_toks_saved"]
+                       - m0["prefill_toks_saved"]) // 2     # warmup + 1 iter
+
+    emit("prefix/mixed_hit_rate", 0.0,
+         f"{mixed_hit_rate:.3f} of eligible chunks served on RAW mixed-"
+         f"length prompts ({min(map(len, mixed))}-{max(map(len, mixed))} "
+         f"tokens, expected {want_mixed:.3f}); warm logits bit-equal cold",
+         value=mixed_hit_rate)
+    emit("prefix/mixed_toks_saved", 0.0,
+         f"{mixed_saved_run} prefill tokens skipped per mixed-length run",
+         value=mixed_saved_run)
+    assert mixed_hit_rate > 0, "mixed-length workload never hit the trie"
+    assert abs(mixed_hit_rate - want_mixed) < 1e-9, (mixed_hit_rate, want_mixed)
+    assert mixed_saved_run == (N_REQ - 1) * SHARED_CHUNKS * nb
 
     if not smoke:
         # near-linear prefill-time reduction with shared-prefix fraction

@@ -110,13 +110,14 @@ def cpu_relative_decode(key):
     return times
 
 
-def _mixed_requests(n_reqs: int, prompt_pad: int, vocab: int, seed: int = 0):
-    """Mixed-length synthetic workload: budgets cycle 8..64."""
+def _mixed_requests(n_reqs: int, max_prompt: int, vocab: int, seed: int = 0):
+    """Mixed-length synthetic workload: raw prompt lengths 4..max_prompt
+    (no scheduler padding), budgets cycling 8..64."""
     from repro.serving.scheduler import Request
     rng = np.random.RandomState(seed)
     budgets = [8, 16, 32, 64]
     return [Request(rid=i,
-                    tokens=rng.randint(1, vocab, size=rng.randint(4, prompt_pad + 1)),
+                    tokens=rng.randint(1, vocab, size=rng.randint(4, max_prompt + 1)),
                     max_new_tokens=budgets[i % len(budgets)])
             for i in range(n_reqs)]
 
@@ -129,14 +130,13 @@ def wave_vs_continuous(key, n_reqs: int = 12, batch: int = 4):
     params = m.init(key)
     pol = dataclasses.replace(named_policy("gear_kcvt4"),
                               buffer_size=16, rank=2, rank_decode=2)
-    prompt_pad = 16
+    max_prompt = 16
     eng = Engine(m, params, EngineConfig(batch=batch, capacity=96, policy=pol,
                                          eos_id=-1))
 
-    def drive(mode: str, warm: bool) -> float:
-        sched = Scheduler(eng, prompt_pad=prompt_pad)
-        for r in _mixed_requests(2 * batch if warm else n_reqs,
-                                 prompt_pad, cfg.vocab_size):
+    def drive(mode: str) -> float:
+        sched = Scheduler(eng)
+        for r in _mixed_requests(n_reqs, max_prompt, cfg.vocab_size):
             sched.submit(r)
         t0 = time.time()
         results = getattr(sched, mode)()
@@ -145,8 +145,11 @@ def wave_vs_continuous(key, n_reqs: int = 12, batch: int = 4):
 
     out = {}
     for mode, tag in (("run", "wave"), ("run_continuous", "continuous")):
-        drive(mode, warm=True)  # compile warmup so tokens/s is steady-state
-        out[tag] = drive(mode, warm=False)
+        # warmup drives the IDENTICAL workload (same seed): prompts are
+        # raw-length now, so every distinct prompt length is its own jit
+        # prefill program and all of them must compile before timing
+        drive(mode)
+        out[tag] = drive(mode)
         emit(f"throughput_sched/{tag}", 0.0, f"tok_per_s={out[tag]:.1f}",
              value=out[tag])
     ratio = out["continuous"] / out["wave"]
@@ -174,15 +177,15 @@ def fused_vs_xla(key, n_reqs: int = 8, batch: int = 4):
     params = m.init(key)
     pol = dataclasses.replace(named_policy("gear_kcvt4"),
                               buffer_size=16, rank=2, rank_decode=2)
-    prompt_pad = 16
+    max_prompt = 16
     out = {}
     for tag, fused in (("xla", "off"), ("fused", "auto")):
         eng = Engine(m, params, EngineConfig(batch=batch, capacity=96, policy=pol,
                                              eos_id=-1, fused=fused))
 
         def drive(n: int):
-            sched = Scheduler(eng, prompt_pad=prompt_pad)
-            for r in _mixed_requests(n, prompt_pad, cfg.vocab_size):
+            sched = Scheduler(eng)
+            for r in _mixed_requests(n, max_prompt, cfg.vocab_size):
                 sched.submit(r)
             sched.run_continuous()
             st = sched.last_stats

@@ -1,14 +1,17 @@
 """End-to-end serving driver: batched requests through the scheduler with a
 GEAR 4-bit cache, served with slot-level continuous batching and the
-radix-trie prefix cache — N requests share one long system prompt, so every
-request after the first splices the prompt's compressed chunks from the
-trie and streams only its own suffix.
+radix-trie prefix cache — N requests of *different* raw lengths share one
+long system prompt, so every request after the first splices the prompt's
+compressed chunks from the trie and streams only its own (length-bucketed)
+suffix.  No prompt padding anywhere: the scheduler hands raw token lists
+to the engine, which buckets them internally (docs/serving.md).
 
 Prints per-request prefill latency with the prefix cache on vs off, the
 trie hit rate, and the GEAR-vs-FP16 logit fidelity check.
 
-    PYTHONPATH=src python examples/serve_compressed.py
+    PYTHONPATH=src python examples/serve_compressed.py [--smoke]
 """
+import argparse
 import dataclasses
 
 import jax
@@ -21,34 +24,41 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import Request, Scheduler
 
 N_REQUESTS = 6
-PROMPT_PAD = 64
-SYSTEM_PROMPT_LEN = 48      # 3 chunks shared by every request
+SYSTEM_PROMPT_LEN = 48      # 3 chunks (n_b = 16) shared by every request
 
 
-def requests(vocab: int, seed: int = 0) -> list[Request]:
+def requests(vocab: int, n: int, seed: int = 0) -> list[Request]:
+    """Shared system prompt + per-request user suffixes of different raw
+    lengths (deliberately not chunk-aligned — the mixed-length workload)."""
     rng = np.random.RandomState(seed)
     system = rng.randint(4, vocab, size=SYSTEM_PROMPT_LEN)
     return [Request(rid=rid,
                     tokens=np.concatenate(
-                        [system, rng.randint(4, vocab,
-                                             size=PROMPT_PAD - SYSTEM_PROMPT_LEN)]),
+                        [system,
+                         rng.randint(4, vocab, size=rng.randint(5, 21))]),
                     max_new_tokens=8)
-            for rid in range(N_REQUESTS)]
+            for rid in range(n)]
 
 
-def serve(model, params, policy, prefix_cache: bool):
+def serve(model, params, policy, prefix_cache: bool, n: int):
     eng = Engine(model, params,
                  EngineConfig(batch=2, capacity=128, policy=policy,
                               prefill_mode="streaming",
                               prefix_cache=prefix_cache))
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
-    for r in requests(model.cfg.vocab_size):
+    sched = Scheduler(eng)
+    for r in requests(model.cfg.vocab_size, n):
         sched.submit(r)
     out = sched.run_continuous()
     return eng, sched, {r.rid: r for r in out}
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests, skip the FP16 fidelity pass (CI)")
+    args = ap.parse_args()
+    n_req = 4 if args.smoke else N_REQUESTS
+
     cfg = smoke_config("llama2-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -56,7 +66,7 @@ def main():
 
     results = {}
     for name, prefix_cache in (("cache-off", False), ("cache-on", True)):
-        eng, sched, res = serve(model, params, pol, prefix_cache)
+        eng, sched, res = serve(model, params, pol, prefix_cache, n_req)
         results[name] = res
         # first request is always a cold miss; later ones splice the shared
         # system prompt, so steady-state prefill latency is what matters
@@ -67,6 +77,11 @@ def main():
         if prefix_cache:
             line += (f", prefix_hit_rate {sched.last_stats['prefix_hit_rate']:.2f}"
                      f", prefill_toks_saved {sched.last_stats['prefill_toks_saved']}")
+            # mixed raw lengths MUST still hit: the trie keys on raw
+            # n_b-aligned chunks, so the shared system prompt matches no
+            # matter how long each request's suffix is
+            assert sched.last_stats["prefix_hit_rate"] > 0, sched.last_stats
+            assert sched.last_stats["prefill_toks_saved"] > 0
         print(line)
 
     # the prefix cache is lossless: identical greedy tokens with it on/off
@@ -74,10 +89,12 @@ def main():
                               results["cache-on"][rid].tokens)
                for rid in results["cache-off"])
     print("prefix cache lossless: greedy tokens identical with cache on/off")
+    if args.smoke:
+        return
 
     # GEAR-vs-FP16 fidelity on the same workload (fp16 has no compressed
     # chunks, so it serves without the prefix cache)
-    _, _, fp16 = serve(model, params, FP16, prefix_cache=False)
+    _, _, fp16 = serve(model, params, FP16, prefix_cache=False, n=n_req)
     agree = np.mean([
         (results["cache-on"][rid].tokens[:8] == fp16[rid].tokens[:8]).mean()
         for rid in fp16])

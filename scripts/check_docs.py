@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Docs-consistency gate: docs/serving.md must document every EngineConfig
+knob.
+
+Parses the ``EngineConfig`` dataclass out of ``src/repro/serving/engine.py``
+with ``ast`` (no imports — the lint lane has no jax) and asserts each field
+name appears as an inline-code knob (`` `name` ``) in docs/serving.md, so
+adding a knob without documenting it fails CI.  Run from the repo root:
+
+    python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ENGINE = ROOT / "src" / "repro" / "serving" / "engine.py"
+DOC = ROOT / "docs" / "serving.md"
+
+
+def engine_config_fields() -> list[str]:
+    tree = ast.parse(ENGINE.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EngineConfig":
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    raise SystemExit(f"EngineConfig dataclass not found in {ENGINE}")
+
+
+def main() -> int:
+    fields = engine_config_fields()
+    if not fields:
+        print(f"error: EngineConfig in {ENGINE} has no annotated fields")
+        return 1
+    doc = DOC.read_text() if DOC.exists() else ""
+    if not doc:
+        print(f"error: {DOC} is missing or empty")
+        return 1
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", doc))
+    missing = [f for f in fields if f not in documented]
+    if missing:
+        print(f"error: docs/serving.md does not document these EngineConfig "
+              f"knobs: {', '.join(missing)}")
+        print("add a row to the knob reference in docs/serving.md §1")
+        return 1
+    print(f"docs/serving.md documents all {len(fields)} EngineConfig knobs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

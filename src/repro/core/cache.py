@@ -524,7 +524,8 @@ def streaming_supported(cfg: CacheConfig) -> bool:
 def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
                                tail_x, project, scale: float,
                                key: jax.Array | None = None,
-                               fused: str = "auto", start_chunk: int = 0):
+                               fused: str = "auto", start_chunk: int = 0,
+                               tail_is_padded: bool = False, true_n=None):
     """Shared driver of the streaming chunked prefill (compress-as-you-go).
 
     ``chunk_xs`` is a pytree of per-chunk inputs with a leading ``[C']``
@@ -559,6 +560,16 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
     extent masks make each suffix chunk's output bit-identical to the cold
     run that computed those chunks itself), and the final length covers
     prefix + suffix.  ``n`` stays the *suffix* token count.
+
+    ``tail_is_padded`` is the length-bucketing hook (mixed-length serving):
+    ``n`` must then be a chunk multiple and the LAST ``n_b`` block of the
+    inputs is a right-padded tail — ``true_n`` (traced, ``<= n``) real
+    tokens overall, pad garbage after.  The tail block is kept OUT of the
+    compression scan (no garbage chunk is ever closed or admitted to the
+    prefix cache) and lands in the FP16 streaming buffer instead; causal
+    masking keeps pad keys out of every real query's scores, and decode
+    masks buffer rows at ``length`` — which is set from ``true_n`` — so
+    the pad rows stay exact zeros forever after.
     """
     if not streaming_supported(cfg):
         raise ValueError(
@@ -571,10 +582,17 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
         key = jax.random.PRNGKey(0)
     pol = cfg.policy
     nb = cfg.chunk
-    C_new = n // nb
+    if tail_is_padded and n % nb:
+        raise ValueError(f"padded-tail prefill needs n % n_b == 0 (n={n}, "
+                         f"n_b={nb})")
+    C_new = n // nb - 1 if tail_is_padded else n // nb
     n_full = C_new * nb
     rem = n - n_full
-    if start_chunk * nb + n > cfg.capacity:
+    # A padded tail holds >= 1 real token, so the tightest static bound on
+    # the true length is n - nb + 1; the engine re-checks the exact raw
+    # length host-side at admission.
+    n_min = n - nb + 1 if tail_is_padded else n
+    if start_chunk * nb + n_min > cfg.capacity:
         raise ValueError(
             f"suffix prefill past capacity: start_chunk {start_chunk} * "
             f"{nb} + {n} tokens > capacity {cfg.capacity}")
@@ -644,15 +662,19 @@ def streaming_prefill_pipeline(cfg: CacheConfig, cache, n: int, chunk_xs,
                 cache.buf_v, v_t.astype(cache.buf_v.dtype), z4))
         outs.append(out_t)
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    n_real = n if true_n is None else true_n
     cache = dataclasses.replace(
-        cache, length=jnp.full((B,), start_chunk * nb + n, jnp.int32))
+        cache,
+        length=jnp.full((B,), jnp.asarray(start_chunk * nb + n_real,
+                                          jnp.int32)))
     return cache, out
 
 
 def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
                                   k: jnp.ndarray, v: jnp.ndarray,
                                   scale: float, key: jax.Array | None = None,
-                                  fused: str = "auto", start_chunk: int = 0):
+                                  fused: str = "auto", start_chunk: int = 0,
+                                  tail_is_padded: bool = False, true_n=None):
     """Streaming chunked prefill over precomputed q/k/v (reference entry).
 
     q: [B, Hq, n, Dh]; k, v: [B, H, n, Dh] — sliced per chunk into
@@ -671,11 +693,13 @@ def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
     "interpret" (force the Pallas kernels in interpret mode).
     ``start_chunk`` > 0 treats q/k/v as the *suffix* after that many
     already-populated chunks of ``cache`` (the prefix-cache splice path).
+    ``tail_is_padded`` / ``true_n`` take the bucketed mixed-length path
+    (see :func:`streaming_prefill_pipeline`).
     """
     pol_nb = cfg.chunk
     B, Hq, n, Dh = q.shape
     H = cfg.kv_heads
-    C_new = n // pol_nb
+    C_new = n // pol_nb - 1 if tail_is_padded else n // pol_nb
     n_full = C_new * pol_nb
 
     def stack(x, heads):
@@ -687,7 +711,7 @@ def streaming_prefill_layer_cache(cfg: CacheConfig, cache, q: jnp.ndarray,
               if n > n_full else None)
     return streaming_prefill_pipeline(cfg, cache, n, chunk_xs, tail_x,
                                       lambda x: x, scale, key, fused,
-                                      start_chunk)
+                                      start_chunk, tail_is_padded, true_n)
 
 
 def append_token(cfg: CacheConfig, cache, k_t: jnp.ndarray, v_t: jnp.ndarray,

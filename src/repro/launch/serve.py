@@ -74,11 +74,15 @@ def main():
     if args.mode == "continuous":
         if cfg.modality != "text":
             raise SystemExit("continuous mode drives text tokens")
-        sched = Scheduler(eng, prompt_pad=args.prompt)
+        sched = Scheduler(eng)
         n_req = args.requests or 2 * args.batch
+        # genuinely mixed-length raw prompts (--prompt is the longest): the
+        # engine length-buckets each one internally, no scheduler padding
+        lo = max(1, args.prompt // 2)
         for rid in range(n_req):
+            plen = lo + rid % (args.prompt - lo + 1)
             toks = np.asarray(jax.random.randint(
-                jax.random.fold_in(key, rid), (args.prompt,), 0, cfg.vocab_size))
+                jax.random.fold_in(key, rid), (plen,), 0, cfg.vocab_size))
             sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=args.gen))
         results = sched.run_continuous()
         st = sched.last_stats

@@ -182,7 +182,8 @@ def streaming_prefill_supported(cfg: ModelConfig, kind: str,
 def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
                                 kind: str, cache_cfg, key=None,
                                 fused: str = "auto", dtype=jnp.bfloat16,
-                                cache=None, start_pos: int = 0):
+                                cache=None, start_pos: int = 0,
+                                padded_tail: bool = False, true_len=None):
     """Streaming chunked prefill of one attention layer: project → compress
     → attend, one ``n_b``-token chunk at a time under two carry-free
     ``lax.scan`` passes (loop fission of the compress-as-you-go pipeline —
@@ -206,15 +207,23 @@ def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
     chunks are stored from that offset, and every attend sees the cached
     chunks as compressed history — bit-identical to the cold prefill that
     would have computed them (DESIGN.md §4).
+
+    ``padded_tail=True`` (with ``true_len`` the traced real token count)
+    marks ``x`` as length-bucketed: ``S`` is a chunk multiple whose last
+    ``n_b`` block is right-padded.  That block stays out of the compression
+    scan and lands in the FP16 streaming buffer; see
+    :func:`repro.core.cache.streaming_prefill_pipeline`.
     """
     B, S, _ = x.shape
     nb = cache_cfg.chunk
     if start_pos % nb:
         raise ValueError(f"start_pos {start_pos} not aligned to chunk {nb}")
+    if padded_tail and S % nb:
+        raise ValueError(f"padded_tail needs S % n_b == 0 (S={S}, n_b={nb})")
     scale = cfg.head_dim ** -0.5
     if cache is None:
         cache = cache_lib.init_layer_cache(cache_cfg, dtype)
-    C_new = S // nb
+    C_new = S // nb - 1 if padded_tail else S // nb
     n_full = C_new * nb
 
     def project(x_blk_pos):
@@ -230,7 +239,8 @@ def attention_prefill_streaming(cfg: ModelConfig, params, x, positions,
     tail_x = (x[:, n_full:], positions[n_full:]) if S > n_full else None
     cache, out = cache_lib.streaming_prefill_pipeline(
         cache_cfg, cache, S, chunk_xs, tail_x, project, scale, key, fused,
-        start_chunk=start_pos // nb)
+        start_chunk=start_pos // nb, tail_is_padded=padded_tail,
+        true_n=true_len)
     out = jnp.moveaxis(out, 1, 2).reshape(B, S, cfg.q_dim).astype(x.dtype)
     return out @ params["wo"].astype(x.dtype), cache
 

@@ -53,7 +53,8 @@ class Model:
     # -- serving ------------------------------------------------------------
     def prefill(self, params, batch: dict, policy: CompressionPolicy,
                 capacity: int, prefill_mode: str = "monolithic",
-                fused: str = "auto"):
+                fused: str = "auto", padded_tail: bool = False,
+                true_len=None):
         """Full-prompt forward producing per-layer caches.
 
         Works for any batch size; the serving engine also calls it at
@@ -66,15 +67,24 @@ class Model:
         history attended in compressed form — decode semantics).  Both
         modes produce bit-identical caches.  ``fused`` picks the prefill
         kernel path ("auto"/"interpret"/"off"), mirroring decode's knob.
+
+        ``padded_tail=True`` (streaming only, with ``true_len`` the traced
+        count of real tokens) is the mixed-length bucketing entry: the
+        batch is right-padded to a chunk multiple, pad tokens never reach
+        compressed storage, cache lengths and the returned logits reflect
+        the true length (see :func:`repro.models.transformer.forward`).
         """
         logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
                                         policy=policy, capacity=capacity,
-                                        prefill_mode=prefill_mode, fused=fused)
+                                        prefill_mode=prefill_mode, fused=fused,
+                                        padded_tail=padded_tail,
+                                        true_len=true_len)
         return logits, caches
 
     def prefill_suffix(self, params, batch: dict, caches, start_pos: int,
                        policy: CompressionPolicy, capacity: int,
-                       fused: str = "auto"):
+                       fused: str = "auto", padded_tail: bool = False,
+                       true_len=None):
         """Suffix-offset prefill over a cache holding a chunk-aligned prefix.
 
         ``batch`` covers only the tokens after the cached prefix;
@@ -86,11 +96,17 @@ class Model:
         (:meth:`repro.serving.engine.Engine.prefill_slot`); the resulting
         cache and last-position logits are bit-identical to a cold prefill
         of prefix + suffix (DESIGN.md §4).  Returns (logits, caches).
+
+        ``padded_tail`` / ``true_len`` bucket a mixed-length suffix the
+        same way :meth:`prefill` does — ``true_len`` counts the real
+        tokens of THIS call's (suffix) batch, not prefix + suffix.
         """
         logits, caches, _ = tfm.forward(self.cfg, params, batch, mode="prefill",
                                         policy=policy, capacity=capacity,
                                         prefill_mode="streaming", fused=fused,
-                                        start_pos=start_pos, init_caches=caches)
+                                        start_pos=start_pos, init_caches=caches,
+                                        padded_tail=padded_tail,
+                                        true_len=true_len)
         return logits, caches
 
     def decode_step(self, params, token_batch: dict, caches, pos,

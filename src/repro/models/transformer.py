@@ -262,7 +262,8 @@ def _apply_block_decode(cfg: ModelConfig, bp, x_t, kind, pos, cache, policy,
 def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
                          q_chunk, policy, batch, capacity, cache_dtype,
                          fused: str, attn_impl: str, cache=None,
-                         start_pos: int = 0):
+                         start_pos: int = 0, padded_tail: bool = False,
+                         true_len=None):
     """Prefill block that builds its layer cache directly (streaming mode).
 
     Layers supporting the streaming pipeline project/attend/compress chunk
@@ -274,16 +275,17 @@ def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
     pipeline, since only it can see the prefix in compressed form.
     Returns (x, aux, cache)."""
     if kind == "rwkv":
-        if start_pos:
-            raise ValueError("suffix prefill cannot resume an RWKV state")
+        if start_pos or padded_tail:
+            raise ValueError("suffix/bucketed prefill cannot resume an "
+                             "RWKV state")
         return _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
                                   q_chunk, want_kv=True)
     ccfg = cache_cfg_for(cfg, kind, policy, batch, capacity)
     if not attn_lib.streaming_prefill_supported(cfg, kind, ccfg):
-        if start_pos:
+        if start_pos or padded_tail:
             raise ValueError(
-                f"suffix prefill requires every layer to support the "
-                f"streaming pipeline (kind={kind!r} does not)")
+                f"suffix/bucketed prefill requires every layer to support "
+                f"the streaming pipeline (kind={kind!r} does not)")
         x, aux, kv = _apply_block_train(cfg, bp, x, kind, positions, prefix_len,
                                         q_chunk, want_kv=True,
                                         attn_impl=attn_impl)
@@ -292,11 +294,13 @@ def _apply_block_prefill(cfg: ModelConfig, bp, x, kind, positions, prefix_len,
     xin = apply_norm(x, bp["ln1"], cfg.norm)
     h, cache = attn_lib.attention_prefill_streaming(
         cfg, bp["attn"], xin, positions, kind, ccfg, fused=fused,
-        dtype=cache_dtype, cache=cache, start_pos=start_pos)
+        dtype=cache_dtype, cache=cache, start_pos=start_pos,
+        padded_tail=padded_tail, true_len=true_len)
     ssm_state = None
     if cfg.ssm and cfg.hybrid_parallel:
-        if start_pos:
-            raise ValueError("suffix prefill cannot resume a hybrid SSM state")
+        if start_pos or padded_tail:
+            raise ValueError("suffix/bucketed prefill cannot resume a "
+                             "hybrid SSM state")
         h2, ssm_state = ssm_lib.ssm_apply(cfg, bp["ssm"], xin)
         h = (h + h2) * 0.5
     x = x + h
@@ -337,7 +341,8 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
             remat: bool = False, remat_policy: str = "full",
             q_chunk_target: int = 512, cache_dtype=jnp.bfloat16,
             unroll_layers: bool = False, prefill_mode: str = "monolithic",
-            fused: str = "auto", start_pos: int = 0, init_caches=None):
+            fused: str = "auto", start_pos: int = 0, init_caches=None,
+            padded_tail: bool = False, true_len=None):
     """Full-sequence forward.
 
     mode="train": returns (logits, aux_loss)
@@ -350,6 +355,13 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
     layer runs the streaming pipeline over the suffix with the cached
     chunks visible as compressed history.  Requires
     ``prefill_mode="streaming"`` and a model whose every layer supports it.
+
+    ``padded_tail`` / ``true_len`` are the length-bucketing hooks (same
+    streaming-only requirement): the batch is right-padded to a chunk
+    multiple, the last chunk-width block stays out of compression (it lands
+    in the FP16 streaming buffer), cache lengths are set from the traced
+    ``true_len``, and the prefill logits come from position ``true_len - 1``
+    instead of the last row.
 
     ``prefill_mode`` selects the prefill pipeline: "monolithic" (full-seq
     attention, then one batched compression event per layer) or "streaming"
@@ -374,6 +386,8 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
     want_kv = mode == "prefill"
     if start_pos and not (want_kv and prefill_mode == "streaming"):
         raise ValueError("start_pos > 0 requires prefill_mode='streaming'")
+    if padded_tail and not (want_kv and prefill_mode == "streaming"):
+        raise ValueError("padded_tail requires prefill_mode='streaming'")
     attn_impl = "chunked"
     if want_kv and fused == "interpret":
         attn_impl = "flash-interpret"
@@ -391,7 +405,8 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
                     q_chunk, policy, B, capacity, cache_dtype, fused,
                     attn_impl,
                     cache=None if unit_caches is None else unit_caches[i],
-                    start_pos=start_pos)
+                    start_pos=start_pos, padded_tail=padded_tail,
+                    true_len=true_len)
                 aux = aux + a
                 caches.append(c)
             return (x, aux), tuple(caches)
@@ -402,7 +417,14 @@ def forward(cfg: ModelConfig, params, batch: dict, mode: str = "train",
             unit_body_stream, (x, jnp.zeros((), jnp.float32)), scan_xs,
             unroll=cfg.pattern_repeats if unroll_layers else 1)
         x = apply_norm(x, params["final_norm"], cfg.norm)
-        logits = logits_from_hidden(cfg, params, x[:, -1:, :])
+        if true_len is not None:
+            # Bucketed prefill: the last REAL token of this call's input
+            # sits at row true_len - 1 (traced), not at the padded S - 1.
+            last = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(true_len, jnp.int32) - 1, 1, axis=1)
+        else:
+            last = x[:, -1:, :]
+        logits = logits_from_hidden(cfg, params, last)
         return logits, tuple(caches), aux
 
     def unit_body(carry, unit_params):

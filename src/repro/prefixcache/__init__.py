@@ -57,14 +57,41 @@ class PrefixCache:
     store may provide ``nbytes_of(payload)``, used instead of
     :func:`payload_nbytes` so the trie's LRU budget prices entries in the
     store's own byte units (exact page bytes for the pool).
+
+    Lifecycle knobs (threaded from
+    :class:`~repro.serving.engine.EngineConfig`):
+
+    * ``ttl`` — seconds a cached chunk stays valid from *insert* (0
+      disables expiry; hits do not refresh it);
+    * ``eviction`` — ``"lru"`` (default) or ``"lfu"`` budget-pressure
+      victim policy;
+    * ``clock`` — injectable monotonic-seconds source (tests);
+    * :meth:`bump_version` — invalidates every cached chunk at once (the
+      engine calls it on a weight swap: chunks compressed under old
+      weights must never be spliced into a new-weights prefill).
+
+    Staleness is enforced lazily at the next walk that touches a stale
+    node; the pruned payloads are freed here the moment they are drained
+    from the trie, and show up in :attr:`stats` under ``expiries`` /
+    ``version_evictions``.
     """
 
-    def __init__(self, chunk: int, budget_bytes: int, store=None):
+    def __init__(self, chunk: int, budget_bytes: int, store=None,
+                 ttl: float = 0.0, eviction: str = "lru", clock=None):
         self.chunk = int(chunk)
-        self.trie = RadixTrie(budget_bytes)
+        self.trie = RadixTrie(budget_bytes, ttl=ttl, eviction=eviction,
+                              clock=clock)
         self.store = ChunkStore() if store is None else store
         self._nbytes_of = getattr(self.store, "nbytes_of", payload_nbytes)
         self.toks_saved = 0
+
+    def bump_version(self) -> None:
+        """Invalidate all cached chunks (see :meth:`RadixTrie.bump_version`)."""
+        self.trie.bump_version()
+
+    def _drain_pruned(self) -> None:
+        for handle in self.trie.drain_pruned():
+            self.store.free(handle)
 
     # ------------------------------------------------------------------
     def match(self, tokens, max_chunks: int | None = None) -> PrefixMatch:
@@ -79,6 +106,7 @@ class PrefixCache:
         if max_chunks is not None:
             keys = keys[:max_chunks]
         nodes = self.trie.lookup(keys, acquire=True)
+        self._drain_pruned()
         self.toks_saved += len(nodes) * self.chunk
         return PrefixMatch(nodes=nodes,
                            payloads=[self.store.get(nd.handle) for nd in nodes])
@@ -98,6 +126,7 @@ class PrefixCache:
         entries = ([None] * start_chunk
                    + [(self.store.put(p), self._nbytes_of(p)) for p in payloads])
         created, unused, evicted = self.trie.insert(keys, entries)
+        self._drain_pruned()
         for handle in unused:
             self.store.free(handle)
         for handle in evicted:
@@ -108,6 +137,7 @@ class PrefixCache:
         """Drop all cached chunks (keeps budget and stats counters)."""
         for handle in self.trie.clear():
             self.store.free(handle)
+        self._drain_pruned()
 
     def evict_bytes(self, n_bytes: int) -> int:
         """Evict least-recently-used unpinned entries until at least
@@ -145,6 +175,8 @@ class PrefixCache:
             "lookup_chunks": st.lookup_chunks,
             "inserts": st.inserts,
             "evictions": st.evictions,
+            "expiries": st.expiries,
+            "version_evictions": st.version_evictions,
             "nodes": self.trie.n_nodes,
             "bytes": self.trie.total_bytes,
             "budget_bytes": self.trie.budget_bytes,

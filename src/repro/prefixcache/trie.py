@@ -11,22 +11,41 @@ bit-identical compressed form no matter which request computed it — a
 finer-grained (per-token) trie would name state the cache layout cannot
 reproduce.
 
-Eviction is LRU over *evictable leaves* under a byte budget: a node can be
-evicted only when it has no children (an interior node is the prefix of a
-longer cached path — dropping it would orphan descendants) and no live
-references.  Callers pin a matched path with ``lookup(acquire=True)`` while
-they splice its payloads and must :meth:`RadixTrie.release` it afterwards;
-referenced nodes are never evicted, so the budget is a soft bound while
-pins are outstanding and a hard bound otherwise.
+Eviction is LRU (or LFU, ``eviction="lfu"``) over *evictable leaves* under
+a byte budget: a node can be evicted only when it has no children (an
+interior node is the prefix of a longer cached path — dropping it would
+orphan descendants) and no live references.  Callers pin a matched path
+with ``lookup(acquire=True)`` while they splice its payloads and must
+:meth:`RadixTrie.release` it afterwards; referenced nodes are never
+evicted, so the budget is a soft bound while pins are outstanding and a
+hard bound otherwise.
+
+Two staleness mechanisms guard cache *validity* on top of the capacity
+budget:
+
+* **TTL** — ``ttl`` seconds from node *creation* (hits do not refresh it;
+  a compressed chunk does not get fresher by being popular);
+* **versioning** — every node is stamped with the trie ``version`` at
+  insert; :meth:`RadixTrie.bump_version` (driven by the engine on a weight
+  swap) makes every existing node stale at once, since chunks compressed
+  under old weights must never be spliced into a new-weights prefill.
+
+Both are enforced *lazily*: a walk (lookup or insert) that steps onto a
+stale node prunes that node's whole subtree instead of matching it.  The
+pruned payload handles accumulate in ``pending_free`` — the facade drains
+them via :meth:`RadixTrie.drain_pruned` and frees them in its store.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Hashable, Iterable, Sequence
+import time
+from typing import Any, Callable, Hashable, Iterable, Sequence
 
 __all__ = ["RadixTrie", "TrieNode", "TrieStats"]
+
+_BLOCKED = object()   # stale child whose pruning a pin deferred
 
 
 @dataclasses.dataclass
@@ -39,7 +58,9 @@ class TrieStats:
     hit_chunks: int = 0     # chunks served across all lookups
     lookup_chunks: int = 0  # chunks eligible across all lookups
     inserts: int = 0        # nodes created
-    evictions: int = 0      # nodes evicted
+    evictions: int = 0      # nodes evicted under byte-budget pressure
+    expiries: int = 0       # nodes pruned past their TTL
+    version_evictions: int = 0  # nodes pruned by a version bump
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -51,10 +72,11 @@ class TrieNode:
     """One cached chunk: edge label ``key`` + opaque payload ``handle``."""
 
     __slots__ = ("key", "parent", "children", "handle", "nbytes", "refs",
-                 "last_use")
+                 "last_use", "uses", "created_at", "version")
 
     def __init__(self, key: Hashable, parent: "TrieNode | None",
-                 handle: Any = None, nbytes: int = 0):
+                 handle: Any = None, nbytes: int = 0,
+                 created_at: float = 0.0, version: int = 0):
         self.key = key
         self.parent = parent
         self.children: dict[Hashable, TrieNode] = {}
@@ -62,20 +84,96 @@ class TrieNode:
         self.nbytes = int(nbytes)
         self.refs = 0
         self.last_use = 0
+        # LFU frequency: creation counts as the first use, so a fresh
+        # insert is never its own eviction victim in the same call — it
+        # ties with single-hit chunks and loses only to them on recency
+        self.uses = 1
+        self.created_at = created_at
+        self.version = version
 
 
 class RadixTrie:
-    def __init__(self, budget_bytes: int):
+    """See the module docstring.  ``ttl=0`` disables expiry; ``clock`` is
+    an injectable monotonic-seconds source (tests pass a fake)."""
+
+    def __init__(self, budget_bytes: int, ttl: float = 0.0,
+                 eviction: str = "lru",
+                 clock: Callable[[], float] | None = None):
+        if eviction not in ("lru", "lfu"):
+            raise ValueError(f"eviction must be 'lru' or 'lfu', got {eviction!r}")
         self.budget_bytes = int(budget_bytes)
+        self.ttl = float(ttl)
+        self.eviction = eviction
+        self.clock = time.monotonic if clock is None else clock
         self.root = TrieNode(key=None, parent=None)
         self.total_bytes = 0
         self.n_nodes = 0
+        self.version = 0
         self.stats = TrieStats()
+        self.pending_free: list[Any] = []
         self._clock = 0
 
     def _tick(self) -> int:
         self._clock += 1
         return self._clock
+
+    # ------------------------------------------------------------------
+    # staleness (TTL + weight version)
+
+    def bump_version(self) -> None:
+        """Invalidate every cached chunk (engine weight swap): nodes keep
+        serving nothing — the next walk that reaches them prunes them."""
+        self.version += 1
+
+    def _stale(self, nd: TrieNode, now: float) -> bool:
+        return (nd.version != self.version
+                or (self.ttl > 0.0 and now - nd.created_at > self.ttl))
+
+    def _prune_subtree(self, nd: TrieNode) -> bool:
+        """Drop ``nd`` and its descendants if none are pinned.
+
+        Returns True when pruned (handles land in ``pending_free`` and the
+        expiry/version counters advance); False when a pin anywhere in the
+        subtree forces deferral — the walk then simply treats the stale
+        node as a miss and the subtree is pruned on a later walk.
+        """
+        sub, stack = [], [nd]
+        while stack:
+            cur = stack.pop()
+            if cur.refs:
+                return False
+            sub.append(cur)
+            stack.extend(cur.children.values())
+        del nd.parent.children[nd.key]
+        for cur in sub:
+            self.total_bytes -= cur.nbytes
+            self.n_nodes -= 1
+            if cur.version != self.version:
+                self.stats.version_evictions += 1
+            else:
+                self.stats.expiries += 1
+            self.pending_free.append(cur.handle)
+        return True
+
+    def _step(self, node: TrieNode, key: Hashable, now: float):
+        """One walk step honoring staleness.
+
+        Returns the live child, None when the edge is missing (or was
+        stale and just pruned), or :data:`_BLOCKED` when the child is
+        stale but a pin in its subtree defers pruning — the walk must
+        stop there without matching, creating, or overwriting anything.
+        """
+        child = node.children.get(key)
+        if child is None:
+            return None
+        if self._stale(child, now):
+            return None if self._prune_subtree(child) else _BLOCKED
+        return child
+
+    def drain_pruned(self) -> list[Any]:
+        """Hand back (and forget) payload handles freed by lazy pruning."""
+        out, self.pending_free = self.pending_free, []
+        return out
 
     # ------------------------------------------------------------------
     def lookup(self, chunk_keys: Sequence[Hashable],
@@ -84,20 +182,25 @@ class RadixTrie:
 
         Returns the node path for the longest prefix of ``chunk_keys``
         present in the trie (empty list on a total miss) and bumps every
-        matched node's LRU recency.  ``acquire=True`` additionally pins
-        each node on the path (refcount +1) so eviction cannot free a
-        payload the caller is about to splice; the caller must
-        :meth:`release` the same list when done.
+        matched node's recency and use count.  Stale nodes (TTL-expired or
+        from an older weight version) never match: the walk prunes their
+        subtree in place (handles go to ``pending_free``) and stops.
+        ``acquire=True`` additionally pins each node on the path
+        (refcount +1) so eviction cannot free a payload the caller is
+        about to splice; the caller must :meth:`release` the same list
+        when done.
         """
         self.stats.lookups += 1
         self.stats.lookup_chunks += len(chunk_keys)
         t = self._tick()
+        now = self.clock()
         node, path = self.root, []
         for key in chunk_keys:
-            child = node.children.get(key)
-            if child is None:
+            child = self._step(node, key, now)
+            if child is None or child is _BLOCKED:
                 break
             child.last_use = t
+            child.uses += 1
             path.append(child)
             node = child
         if acquire:
@@ -134,11 +237,17 @@ class RadixTrie:
         if len(entries) != len(chunk_keys):
             raise ValueError(f"{len(entries)} entries for {len(chunk_keys)} keys")
         t = self._tick()
+        now = self.clock()
         node = self.root
         created: list[TrieNode] = []
         unused: list[Any] = []
         for i, (key, entry) in enumerate(zip(chunk_keys, entries)):
-            child = node.children.get(key)
+            child = self._step(node, key, now)
+            if child is _BLOCKED:
+                # a pinned-but-stale subtree occupies this edge: nothing
+                # below it may be matched or replaced until it is pruned
+                unused.extend(e[0] for e in entries[i:] if e is not None)
+                break
             if child is None:
                 if entry is None:
                     # cannot extend past a missing unbacked node; hand every
@@ -147,7 +256,8 @@ class RadixTrie:
                     unused.extend(e[0] for e in entries[i:] if e is not None)
                     break
                 handle, nbytes = entry
-                child = TrieNode(key, node, handle, nbytes)
+                child = TrieNode(key, node, handle, nbytes,
+                                 created_at=now, version=self.version)
                 node.children[key] = child
                 self.total_bytes += child.nbytes
                 self.n_nodes += 1
@@ -170,8 +280,15 @@ class RadixTrie:
                 out.append(nd)
         return out
 
+    def _victim_rank(self, nd: TrieNode) -> tuple:
+        # LRU: oldest recency first.  LFU: fewest uses first, recency as
+        # the tiebreak so equal-frequency victims still age out in order.
+        if self.eviction == "lfu":
+            return (nd.uses, nd.last_use)
+        return (nd.last_use,)
+
     def evict_to_budget(self) -> list[Any]:
-        """Evict LRU evictable leaves until within budget.
+        """Evict LRU/LFU evictable leaves until within budget.
 
         Returns the payload handles freed (for the caller's store).  May
         leave the trie above budget when every remaining leaf is pinned —
@@ -183,7 +300,8 @@ class RadixTrie:
         evicted: list[Any] = []
         if self.total_bytes <= self.budget_bytes:
             return evicted
-        heap = [(nd.last_use, id(nd), nd) for nd in self._evictable_leaves()]
+        heap = [(self._victim_rank(nd), id(nd), nd)
+                for nd in self._evictable_leaves()]
         heapq.heapify(heap)
         while self.total_bytes > self.budget_bytes and heap:
             _, _, victim = heapq.heappop(heap)
@@ -195,7 +313,8 @@ class RadixTrie:
             parent = victim.parent
             if (parent is not self.root and not parent.children
                     and parent.refs == 0):
-                heapq.heappush(heap, (parent.last_use, id(parent), parent))
+                heapq.heappush(heap, (self._victim_rank(parent), id(parent),
+                                      parent))
         return evicted
 
     def clear(self) -> list[Any]:

@@ -121,7 +121,14 @@ class EngineConfig:
     # PAGED layout the trie's payloads are pool page ids, so a hit is a
     # refcount bump — no chunk bytes are ever copied.
     prefix_cache: bool = False
-    prefix_cache_bytes: int = 256 << 20   # trie LRU byte budget
+    prefix_cache_bytes: int = 256 << 20   # trie eviction byte budget
+    # Trie lifecycle: ``prefix_cache_ttl`` seconds a cached chunk stays
+    # valid from insert (0 = never expires; hits do not refresh it) and
+    # the budget-pressure victim policy ("lru" recency / "lfu" use count).
+    # Weight swaps invalidate independently of both: Engine.set_params
+    # bumps a version tag that makes every cached chunk stale at once.
+    prefix_cache_ttl: float = 0.0
+    prefix_cache_eviction: str = "lru"
     # Cache layout (:class:`CacheLayout`); strings are coerced.  PAGED puts
     # every GEAR-compressible attention layer's closed chunks into a global
     # page pool; window/fp16/RWKV/SSM state stays dense inside the tree.
@@ -148,6 +155,18 @@ class EngineConfig:
                 "prefix_cache requires prefill_mode='streaming': the hit "
                 "path attends the cached prefix in compressed form, so only "
                 "streaming cold prefills are bit-identical to warm ones")
+        if self.prefix_cache_eviction not in ("lru", "lfu"):
+            raise ValueError(
+                "prefix_cache_eviction must be 'lru' or 'lfu', got "
+                f"{self.prefix_cache_eviction!r}")
+        if self.prefix_cache_ttl < 0:
+            raise ValueError(
+                f"prefix_cache_ttl must be >= 0, got {self.prefix_cache_ttl}")
+        if ((self.prefix_cache_ttl or self.prefix_cache_eviction != "lru")
+                and not self.prefix_cache):
+            raise ValueError(
+                "prefix_cache_ttl / prefix_cache_eviction require "
+                "prefix_cache=True")
         if self.pool_pages and self.pool_bytes:
             raise ValueError("set pool_pages OR pool_bytes, not both")
         if self.layout is CacheLayout.DENSE and (self.pool_pages or self.pool_bytes):
@@ -209,6 +228,24 @@ class Engine:
             lambda p, b: model.prefill(p, b, ecfg.policy, cap,
                                        prefill_mode=ecfg.prefill_mode,
                                        fused=ecfg.fused))
+        # Mixed-length serving: prefill_slot buckets a raw-length prompt up
+        # to the next n_b multiple (the padded tail lands in the FP16
+        # streaming buffer, never in a compressed chunk), so jit compiles
+        # one program per BUCKET instead of one per distinct prompt length.
+        # Gated on the same predicate as the prefix cache — bucketing rides
+        # the streaming pipeline's padded-tail path, so every layer must
+        # support it; other engines prefill at the exact raw length (one
+        # program per length).
+        self.weight_version = 0
+        self._can_bucket = (
+            ecfg.prefill_mode is PrefillMode.STREAMING
+            and prefix_cache_unsupported_reason(self.cfg, ecfg.policy, cap)
+            is None)
+        if self._can_bucket:
+            self._prefill_bucketed = jax.jit(
+                lambda p, b, tl: model.prefill(
+                    p, b, ecfg.policy, cap, prefill_mode="streaming",
+                    fused=ecfg.fused, padded_tail=True, true_len=tl))
         if self.layout is CacheLayout.PAGED:
             self._init_paged(cap)
             self._decode = jax.jit(
@@ -251,17 +288,20 @@ class Engine:
             store = (PagePoolStore(self.pool)
                      if self.layout is CacheLayout.PAGED else None)
             self.prefix_cache = PrefixCache(ecfg.policy.buffer_size,
-                                            ecfg.prefix_cache_bytes, store=store)
+                                            ecfg.prefix_cache_bytes, store=store,
+                                            ttl=ecfg.prefix_cache_ttl,
+                                            eviction=ecfg.prefix_cache_eviction)
             self._cache_cfgs = [cache_cfg_for(self.cfg, kind, ecfg.policy, 1, cap)
                                 for kind in self.cfg.layer_pattern]
             # per-shape jitted programs for the hit path, keyed by the
-            # cached-prefix chunk count (suffix prefill) and extraction
-            # chunk range — padded prompts mean only a handful of shapes
-            # ever occur; jitting them matters because the eager versions
-            # pay one dispatch per cache field per chunk.  The scaffold
-            # splice needs no key: its trace depends only on the payload
-            # pytree structure, which jit re-specializes on by itself.
-            self._suffix_fns: dict[int, Any] = {}
+            # cached-prefix chunk count (suffix prefill; plus a padded-tail
+            # flag for bucketed suffixes) and extraction chunk range —
+            # length bucketing means only a handful of shapes ever occur;
+            # jitting them matters because the eager versions pay one
+            # dispatch per cache field per chunk.  The scaffold splice
+            # needs no key: its trace depends only on the payload pytree
+            # structure, which jit re-specializes on by itself.
+            self._suffix_fns: dict[tuple[int, bool], Any] = {}
             self._extract_fns: dict[tuple[int, int], Any] = {}
             self._splice_prefix = jax.jit(
                 lambda fresh, payloads: pc_store.splice_tree_chunks(
@@ -322,7 +362,9 @@ class Engine:
         if getattr(self, "prefix_cache", None) is not None:
             self.prefix_cache = PrefixCache(self.ecfg.policy.buffer_size,
                                             self.ecfg.prefix_cache_bytes,
-                                            store=PagePoolStore(self.pool))
+                                            store=PagePoolStore(self.pool),
+                                            ttl=self.ecfg.prefix_cache_ttl,
+                                            eviction=self.ecfg.prefix_cache_eviction)
 
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
@@ -349,6 +391,25 @@ class Engine:
                 else "fused")
 
     # ------------------------------------------------------------------
+    def set_params(self, params: Any) -> None:
+        """Swap the served weights (hot reload / fine-tune push).
+
+        Bumps :attr:`weight_version` and invalidates every prefix-cache
+        entry: cached chunks were compressed under the OLD weights, so
+        splicing them into a new-weights prefill would silently serve
+        stale activations.  The trie prunes lazily — the counters show up
+        as ``version_evictions`` in :attr:`PrefixCache.stats`.
+        """
+        if self.mesh is not None:
+            pshard = shd.shardings_for(
+                self.mesh, shd.param_pspecs(self.cfg, params, self.mesh))
+            params = jax.device_put(params, pshard)
+        self.params = params
+        self.weight_version += 1
+        if self.prefix_cache is not None:
+            self.prefix_cache.bump_version()
+
+    # ------------------------------------------------------------------
     def prefill(self, batch: dict):
         if self.layout is CacheLayout.PAGED:
             raise NotImplementedError(
@@ -358,6 +419,25 @@ class Engine:
         if self._cache_shard is not None:
             caches = jax.device_put(caches, self._cache_shard)
         return logits, caches
+
+    def _cold_prefill(self, batch1: dict):
+        """Batch-1 prompt prefill at bucketed length.
+
+        A prompt whose raw length is not an ``n_b`` multiple is right-padded
+        to the next bucket and run through the padded-tail streaming
+        pipeline (pad tokens never reach compressed storage; cache lengths
+        and logits reflect the raw length), so jit compiles one program per
+        bucket.  Aligned prompts — and engines that cannot bucket — take
+        the plain prefill program at the exact length.
+        """
+        n = batch1["tokens"].shape[1]
+        nb = self.ecfg.policy.buffer_size
+        if not self._can_bucket or n % nb == 0:
+            return self._prefill(self.params, batch1)
+        n_bucket = (n + nb - 1) // nb * nb
+        toks = jnp.asarray(batch1["tokens"], jnp.int32)
+        padded = {"tokens": jnp.pad(toks, ((0, 0), (0, n_bucket - n)))}
+        return self._prefill_bucketed(self.params, padded, jnp.int32(n))
 
     def decode(self, token_batch: dict, caches, pos):
         """One decode step.  ``pos``: scalar or per-slot [B] int32 vector."""
@@ -382,14 +462,24 @@ class Engine:
         the prompt's FP16 K/V, so long-prompt splices stay within the
         compressed-cache memory budget.
 
+        ``batch1`` carries the RAW prompt (no scheduler padding).  Prompts
+        whose length is not an ``n_b`` multiple are length-bucketed: padded
+        up to the next chunk multiple and run through the padded-tail
+        streaming pipeline, so jit compiles one program per bucket while
+        cache lengths, logits, and trie keys all reflect the true length
+        (engines that cannot take the streaming pipeline prefill at the
+        exact raw length instead — one compile per distinct length).
+
         With ``EngineConfig.prefix_cache`` on, the trie is consulted first:
-        the longest cached chunk-aligned prefix of the (padded) prompt is
+        the longest cached chunk-aligned prefix of the raw prompt is
         spliced straight into a batch-1 cache tree and only the remaining
-        suffix runs streaming prefill, with the prefix visible as
-        already-compressed history — bit-identical caches and logits vs the
-        cold path (DESIGN.md §4).  ``admit`` is the scheduler's admission
-        policy: when True the prompt's newly closed chunks are inserted
-        back into the trie after prefill.
+        suffix runs streaming prefill (bucketed the same way), with the
+        prefix visible as already-compressed history — bit-identical caches
+        and logits vs the cold bucketed path (DESIGN.md §4).  ``admit`` is
+        the scheduler's admission policy: when True the prompt's newly
+        closed chunks are inserted back into the trie after prefill — only
+        FULL ``n_b``-token chunks of real tokens close, so pad garbage
+        never enters the trie.
 
         PAGED layout: the slot first reserves its lifetime's pages from the
         pool — ``reserve_tokens`` (prompt + generation budget; defaults to
@@ -405,7 +495,7 @@ class Engine:
             return self._prefill_slot_paged(batch1, caches, slot, admit,
                                             reserve_tokens)
         if self.prefix_cache is None:
-            logits, one = self._prefill(self.params, batch1)
+            logits, one = self._cold_prefill(batch1)
             return logits, self._splice_donate_one(caches, one,
                                                    jnp.asarray(slot, jnp.int32))
         tokens = np.asarray(batch1["tokens"][0])
@@ -419,11 +509,9 @@ class Engine:
             if n_hit:
                 one1 = self._splice_prefix(self._fresh_batch1(),
                                            match.payloads)
-                suffix = {"tokens": jnp.asarray(tokens[None, n_hit * nb:],
-                                                jnp.int32)}
-                logits, one = self._suffix_fn(n_hit)(self.params, suffix, one1)
+                logits, one = self._prefill_suffix(tokens, n_hit, one1)
             else:
-                logits, one = self._prefill(self.params, batch1)
+                logits, one = self._cold_prefill(batch1)
             if admit and n // nb > n_hit:
                 payloads = self._extract_fn(n_hit, n // nb)(one)
                 self.prefix_cache.insert(tokens, payloads, start_chunk=n_hit)
@@ -431,6 +519,21 @@ class Engine:
             self.prefix_cache.release(match)
         return logits, self._splice_donate_one(caches, one,
                                                jnp.asarray(slot, jnp.int32))
+
+    def _prefill_suffix(self, tokens: np.ndarray, n_hit: int, one1):
+        """Run the (possibly bucketed) suffix after an ``n_hit``-chunk trie
+        hit over the spliced batch-1 scaffold ``one1``."""
+        nb = self.ecfg.policy.buffer_size
+        suf = np.asarray(tokens[n_hit * nb:], np.int32)
+        n_suf = suf.shape[0]
+        if n_suf % nb == 0:
+            suffix = {"tokens": jnp.asarray(suf[None], jnp.int32)}
+            return self._suffix_fn(n_hit)(self.params, suffix, one1)
+        n_bucket = (n_suf + nb - 1) // nb * nb
+        padded = {"tokens": jnp.pad(jnp.asarray(suf[None], jnp.int32),
+                                    ((0, 0), (0, n_bucket - n_suf)))}
+        return self._suffix_fn(n_hit, padded_tail=True)(
+            self.params, padded, one1, jnp.int32(n_suf))
 
     def _prefill_slot_paged(self, batch1, caches, slot, admit, reserve_tokens):
         nb = self.ecfg.policy.buffer_size
@@ -458,11 +561,9 @@ class Engine:
                 one1 = self._gather_scaffold(
                     caches, self._fresh_batch1(),
                     jnp.asarray(shared, jnp.int32))
-                suffix = {"tokens": jnp.asarray(tokens[None, n_hit * nb:],
-                                                jnp.int32)}
-                logits, one = self._suffix_fn(n_hit)(self.params, suffix, one1)
+                logits, one = self._prefill_suffix(tokens, n_hit, one1)
             else:
-                logits, one = self._prefill(self.params, batch1)
+                logits, one = self._cold_prefill(batch1)
             n_sc = n_closed - n_hit
             caches = self._paged_splice_fn(n_hit)(
                 caches, one,
@@ -549,26 +650,35 @@ class Engine:
             self._fresh1 = self.model.init_caches(self.ecfg.policy, 1, self._cap())
         return self._fresh1
 
-    def _suffix_fn(self, n_pre_chunks: int):
+    def _suffix_fn(self, n_pre_chunks: int, padded_tail: bool = False):
         """Jitted suffix prefill for a ``n_pre_chunks``-chunk cached prefix.
 
         The prefix length is static (it fixes every array shape in the
         suffix pipeline), so programs are compiled per distinct chunk
-        count.  The scaffold tree is NOT donated: the streaming store path
-        assembles each cache array from the stacked compression-scan
-        outputs, so XLA cannot alias any input leaf into its output (every
-        leaf would trip the unusable-donation warning) — and the
-        un-donated scaffold may alias the memoized ``_fresh_batch1`` tree's
-        buffer/length leaves safely.
+        count; ``padded_tail=True`` is the bucketed-suffix variant, which
+        additionally takes the traced true suffix length (jit then
+        re-specializes per bucket width on top).  The scaffold tree is NOT
+        donated: the streaming store path assembles each cache array from
+        the stacked compression-scan outputs, so XLA cannot alias any
+        input leaf into its output (every leaf would trip the
+        unusable-donation warning) — and the un-donated scaffold may alias
+        the memoized ``_fresh_batch1`` tree's buffer/length leaves safely.
         """
-        fn = self._suffix_fns.get(n_pre_chunks)
+        fn = self._suffix_fns.get((n_pre_chunks, padded_tail))
         if fn is None:
             start = n_pre_chunks * self.ecfg.policy.buffer_size
-            fn = jax.jit(
-                lambda p, b, c1: self.model.prefill_suffix(
-                    p, b, c1, start, self.ecfg.policy, self._cap(),
-                    fused=self.ecfg.fused))
-            self._suffix_fns[n_pre_chunks] = fn
+            if padded_tail:
+                fn = jax.jit(
+                    lambda p, b, c1, tl: self.model.prefill_suffix(
+                        p, b, c1, start, self.ecfg.policy, self._cap(),
+                        fused=self.ecfg.fused, padded_tail=True,
+                        true_len=tl))
+            else:
+                fn = jax.jit(
+                    lambda p, b, c1: self.model.prefill_suffix(
+                        p, b, c1, start, self.ecfg.policy, self._cap(),
+                        fused=self.ecfg.fused))
+            self._suffix_fns[(n_pre_chunks, padded_tail)] = fn
         return fn
 
     def _extract_fn(self, c_lo: int, c_hi: int):

@@ -26,14 +26,19 @@ per-request prefill/decode latency.  When the engine has a prefix cache
 admission policy into every slot prefill and reports ``prefix_hit_rate`` /
 ``prefill_toks_saved`` in ``last_stats``.
 
-**Prefix cache vs left-padding.**  Prompts are LEFT-padded to
-``prompt_pad`` before prefill, and the trie keys on the *padded* token
-sequence — so only requests whose raw prompts have the same length see
-each other's chunks (different pad widths shift every chunk boundary).
-Shared-system-prompt workloads should therefore pad user suffixes to a
-common length (as the shipped demos/benches do); unpadded or
-length-bucketed scheduling that aligns raw prompts is an open item
-(ROADMAP).
+**Raw prompts, no scheduler padding.**  Continuous mode hands each
+request's RAW token list to :meth:`Engine.prefill_slot`: the engine
+length-buckets the prompt up to the next ``n_b`` multiple internally
+(bounding jit recompilation to one program per bucket) while cache
+lengths, logits, and prefix-trie keys all reflect the true length.  The
+trie therefore keys on raw ``n_b``-aligned token chunks, so requests of
+*different* lengths sharing a chunk-aligned prefix (the mixed-length
+shared-system-prompt workload) hit each other's chunks — see
+docs/serving.md and DESIGN.md §4.  Wave mode still left-pads, but only to
+the longest raw prompt *within each wave* (a whole wave shares one prefill
+program); mixed-length waves therefore shift chunk boundaries per wave —
+use continuous mode when prefix reuse or per-request numeric
+reproducibility across batch compositions matters.
 """
 
 from __future__ import annotations
@@ -69,29 +74,39 @@ class Result:
 
 
 class Scheduler:
-    def __init__(self, engine: Engine, prompt_pad: int,
-                 prefix_admission: str = "all"):
-        """``prefix_admission`` is the prefix-cache admission policy threaded
-        to :meth:`Engine.prefill_slot` when the engine has a prefix cache:
-        "all" inserts every request's newly closed prompt chunks into the
-        trie; "off" reuses cached prefixes but admits nothing new (e.g. a
-        bursty one-off workload that would churn the LRU budget)."""
+    """Request queue + batching policy over one :class:`Engine`.
+
+    Construct with the engine and (optionally) the prefix-cache admission
+    policy, :meth:`submit` requests, then drain with :meth:`run` (wave
+    batching) or :meth:`run_continuous` (slot-level continuous batching —
+    the recommended mode; see the module docstring).  Per-run aggregate
+    metrics land in :attr:`last_stats`.
+
+    ``prefix_admission`` is threaded to :meth:`Engine.prefill_slot` when
+    the engine has a prefix cache: "all" inserts every request's newly
+    closed prompt chunks into the trie; "off" reuses cached prefixes but
+    admits nothing new (e.g. a bursty one-off workload that would churn
+    the eviction budget).
+    """
+
+    def __init__(self, engine: Engine, prefix_admission: str = "all"):
         if prefix_admission not in ("all", "off"):
             raise ValueError(
                 f"prefix_admission must be all/off, got {prefix_admission!r}")
         self.engine = engine
-        self.prompt_pad = prompt_pad
         self.prefix_admission = prefix_admission
         self.queue: deque[Request] = deque()
         self.last_stats: dict = {}
 
     def _need_tokens(self, req: Request) -> int:
-        """Cache tokens a request's whole lifetime holds: prompt_pad tokens
-        of prefill (+ VLM prefix) plus one appended token per decode step
-        (the first generated token comes from prefill)."""
+        """Cache tokens a request's whole lifetime holds: its raw prompt
+        (+ VLM prefix) plus one appended token per decode step (the first
+        generated token comes from prefill).  True lifetime — paged
+        admission reserves exactly these pages, so shorter prompts really
+        do cost fewer pages."""
         prefix = (self.engine.cfg.num_prefix_tokens
                   if self.engine.cfg.modality == "vlm" else 0)
-        return self.prompt_pad + prefix + req.max_new_tokens - 1
+        return len(req.tokens) + prefix + req.max_new_tokens - 1
 
     def submit(self, req: Request) -> None:
         # A request's whole lifetime must fit the engine's cache capacity:
@@ -106,7 +121,7 @@ class Scheduler:
         cap = self.engine._cap()
         if need > cap:
             raise ValueError(
-                f"request {req.rid}: prompt_pad {self.prompt_pad} + budget "
+                f"request {req.rid}: prompt of {len(req.tokens)} + budget "
                 f"{req.max_new_tokens} needs {need} cache tokens but engine "
                 f"capacity is {cap}")
         pool = self.engine.pool
@@ -124,7 +139,14 @@ class Scheduler:
     # ------------------------------------------------------------------
     # Wave mode
     def run(self) -> list[Result]:
-        """Drain the queue in engine-batch-sized waves."""
+        """Drain the queue in engine-batch-sized waves.
+
+        Each wave shares ONE full-batch prefill program, so its prompts are
+        left-padded to the wave's longest raw prompt.  Left-padding shifts
+        chunk boundaries, so a request's numerics depend on its wave's
+        composition — use :meth:`run_continuous` when per-request
+        reproducibility or prefix-cache reuse matters.
+        """
         results: list[Result] = []
         B = self.engine.ecfg.batch
         eos = self.engine.ecfg.eos_id
@@ -134,7 +156,8 @@ class Scheduler:
             while len(wave) < B:                      # pad with a copy slot
                 wave.append(Request(rid=-1, tokens=wave[0].tokens,
                                     max_new_tokens=wave[0].max_new_tokens))
-            prompts = np.stack([_pad(r.tokens, self.prompt_pad) for r in wave])
+            wave_pad = max(len(r.tokens) for r in wave)
+            prompts = np.stack([_pad(r.tokens, wave_pad) for r in wave])
             budget = max(r.max_new_tokens for r in wave)
             toks, stats = self.engine.generate(
                 {"tokens": jnp.asarray(prompts, jnp.int32)}, budget,
@@ -202,7 +225,7 @@ class Scheduler:
 
         def splice(s: int) -> bool:
             r = self.queue.popleft()
-            prompt = _pad(r.tokens, self.prompt_pad)[None]
+            prompt = np.asarray(r.tokens, np.int32)[None]   # raw, unpadded
             t0 = time.time()
             try:
                 logits = view.prefill_slot(
@@ -300,6 +323,10 @@ class Scheduler:
                 pstats["prefill_toks_saved"] - pstats0["prefill_toks_saved"])
             self.last_stats["prefix_evictions"] = (
                 pstats["evictions"] - pstats0["evictions"])
+            self.last_stats["prefix_expiries"] = (
+                pstats["expiries"] - pstats0["expiries"])
+            self.last_stats["prefix_version_evictions"] = (
+                pstats["version_evictions"] - pstats0["version_evictions"])
         return results
 
 
@@ -312,6 +339,8 @@ def _truncate_eos(tokens: np.ndarray, eos_id: int) -> np.ndarray:
 
 
 def _pad(tokens: np.ndarray, length: int) -> np.ndarray:
+    """Left-pad (or left-truncate) to ``length`` — wave mode's per-wave
+    prompt alignment; continuous mode sends raw prompts instead."""
     if len(tokens) >= length:
         return tokens[-length:]
     return np.pad(tokens, (length - len(tokens), 0))

@@ -41,7 +41,12 @@ class CacheView(Protocol):
 
     def prefill_slot(self, batch1: dict, slot: int, admit: bool = True,
                      reserve_tokens: int | None = None):
-        """Prefill one request into ``slot``; returns its last-position logits."""
+        """Prefill one request into ``slot``; returns its last-position
+        logits.  ``batch1`` carries the RAW-length prompt (no padding) —
+        the engine length-buckets it internally (docs/serving.md §2).
+        ``admit=False`` skips inserting the prompt's chunks into the
+        prefix trie; ``reserve_tokens`` right-sizes a paged reservation
+        to the request's true lifetime instead of full capacity."""
         ...
 
     def reset_slot(self, slot: int) -> None: ...

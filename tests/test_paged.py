@@ -65,7 +65,7 @@ def _requests(n=5, seed=0):
 
 
 def _run(engine):
-    sched = Scheduler(engine, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(engine)
     for r in _requests():
         sched.submit(r)
     return {r.rid: r.tokens for r in sched.run_continuous()}, sched.last_stats
@@ -160,7 +160,7 @@ def test_paged_prefix_cache_shares_pages():
                             max_new_tokens=5) for i in range(4)]
 
     def run(eng):
-        s = Scheduler(eng, prompt_pad=32)
+        s = Scheduler(eng)
         for r in reqs():
             s.submit(r)
         return {r.rid: r.tokens for r in s.run_continuous()}, s.last_stats
@@ -188,7 +188,7 @@ def test_oom_admission_queues_not_crashes():
     ecfg = EngineConfig(batch=2, capacity=CAP, policy=pol, eos_id=EOS,
                         layout="paged")
     roomy, _ = _run(Engine(model, params, ecfg))
-    # need = PROMPT_PAD + max_new - 1 <= 16 -> 2 pages of n_b=8; pool of 2
+    # need = raw prompt (<= 8) + max_new - 1 <= 16 -> 2 pages of n_b=8
     tight = Engine(model, params, dataclasses.replace(ecfg, pool_pages=3))
     got, stats = _run(tight)
     for rid in roomy:
@@ -207,7 +207,7 @@ def test_submit_rejects_impossible_request():
     eng = Engine(model, params, EngineConfig(
         batch=2, capacity=CAP, policy=_small("gear_kcvt4"),
         layout="paged", pool_pages=2))        # 1 allocatable page
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     with pytest.raises(ValueError, match="pool pages"):
         sched.submit(Request(rid=0, tokens=np.arange(4), max_new_tokens=30))
 

@@ -100,6 +100,90 @@ def test_trie_interior_nodes_survive_leaf_eviction():
     assert len(trie.lookup(_keys([1], [2], [3]))) == 1
 
 
+def test_trie_ttl_expiry_prunes_lazily():
+    clock = {"t": 0.0}
+    trie = RadixTrie(1 << 20, ttl=10.0, clock=lambda: clock["t"])
+    trie.insert(_keys([1], [2]), [_entry(10, "a"), _entry(10, "b")])
+    clock["t"] = 9.0
+    assert len(trie.lookup(_keys([1], [2]))) == 2     # still fresh
+    clock["t"] = 10.5                                 # hits did NOT refresh
+    assert trie.lookup(_keys([1], [2])) == []
+    assert trie.n_nodes == 0 and trie.total_bytes == 0
+    assert trie.stats.expiries == 2
+    assert set(trie.drain_pruned()) == {"a", "b"}
+    assert trie.drain_pruned() == []                  # drained once
+
+
+def test_trie_version_bump_invalidates_everything():
+    trie = RadixTrie(1 << 20)
+    trie.insert(_keys([1], [2]), [_entry(10, "a"), _entry(10, "b")])
+    trie.bump_version()
+    assert trie.lookup(_keys([1], [2])) == []
+    assert trie.stats.version_evictions == 2
+    assert set(trie.drain_pruned()) == {"a", "b"}
+    # inserts under the new version are live again
+    trie.insert(_keys([1]), [_entry(10, "c")])
+    assert len(trie.lookup(_keys([1]))) == 1
+    assert trie.n_nodes == 1
+
+
+def test_trie_stale_pinned_subtree_blocks_without_leaking():
+    """A stale-but-pinned subtree defers pruning: walks stop at it (no
+    match, no overwrite — handles of a colliding insert come back as
+    unused) and the prune happens on the first walk after release."""
+    clock = {"t": 0.0}
+    trie = RadixTrie(1 << 20, ttl=5.0, clock=lambda: clock["t"])
+    trie.insert(_keys([1], [2]), [_entry(10, "a"), _entry(10, "b")])
+    pinned = trie.lookup(_keys([1], [2]), acquire=True)
+    clock["t"] = 6.0
+    assert trie.lookup(_keys([1], [2])) == []         # stale: never matches
+    created, unused, _ = trie.insert(_keys([1], [3]),
+                                     [_entry(10, "x"), _entry(10, "y")])
+    assert created == [] and set(unused) == {"x", "y"}
+    assert trie.n_nodes == 2 and trie.drain_pruned() == []
+    trie.release(pinned)
+    assert trie.lookup(_keys([1])) == []              # now prunable
+    assert set(trie.drain_pruned()) == {"a", "b"}
+    assert trie.stats.expiries == 2 and trie.n_nodes == 0
+
+
+def test_trie_lfu_evicts_least_used_not_least_recent():
+    """a: hot early (3 uses, oldest recency).  b: cold (1 use, newer
+    recency).  LRU would sacrifice a; LFU keeps it and drops b.  The
+    incoming chunk c ties b on uses but is newer, so it is admitted."""
+    trie = RadixTrie(budget_bytes=20, eviction="lfu")
+    trie.insert(_keys([1]), [_entry(10, "a")])
+    trie.lookup(_keys([1]))
+    trie.lookup(_keys([1]))                           # a: 3 uses, oldest
+    trie.insert(_keys([2]), [_entry(10, "b")])        # b: 1 use, most recent
+    _, _, evicted = trie.insert(_keys([3]), [_entry(10, "c")])
+    assert evicted == ["b"]                           # LRU would pick "a"
+    assert len(trie.lookup(_keys([1]))) == 1
+    assert len(trie.lookup(_keys([3]))) == 1
+
+
+def test_trie_rejects_unknown_eviction_policy():
+    with pytest.raises(ValueError, match="eviction"):
+        RadixTrie(1 << 20, eviction="mru")
+
+
+def test_prefix_cache_ttl_frees_store_payloads():
+    clock = {"t": 0.0}
+    pc = PrefixCache(chunk=2, budget_bytes=1 << 20, ttl=4.0,
+                     eviction="lfu", clock=lambda: clock["t"])
+    pc.insert([1, 2, 3, 4], [np.zeros(4, np.uint8), np.zeros(4, np.uint8)])
+    m = pc.match([1, 2, 3, 4])
+    pc.release(m)
+    assert m.n_chunks == 2
+    clock["t"] = 5.0
+    m = pc.match([1, 2, 3, 4])
+    pc.release(m)
+    assert m.n_chunks == 0
+    st = pc.stats
+    assert st["expiries"] == 2 and st["nodes"] == 0 and st["bytes"] == 0
+    assert len(pc.store) == 0 and pc.store.total_bytes == 0
+
+
 def test_trie_refcounted_nodes_never_evicted():
     trie = RadixTrie(budget_bytes=1 << 20)
     trie.insert(_keys([1], [2]), [_entry(10, "a"), _entry(10, "b")])
@@ -299,7 +383,7 @@ def test_continuous_batching_prefix_on_off_token_parity():
     cold, warm = _engines()
     outs = {}
     for name, eng in (("off", cold), ("on", warm)):
-        sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+        sched = Scheduler(eng)
         for i, prompt in enumerate(_prompts(shared_chunks=3, n=4, seed=1)):
             sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=5))
         outs[name] = {r.rid: r.tokens for r in sched.run_continuous()}
@@ -311,7 +395,7 @@ def test_continuous_batching_prefix_on_off_token_parity():
         np.testing.assert_array_equal(outs["off"][rid], outs["on"][rid])
     # last_stats is per-run, not engine-lifetime: replaying the workload
     # hits every eligible chunk, so THIS run's rate is exactly 1.0
-    sched = Scheduler(warm, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(warm)
     for i, prompt in enumerate(_prompts(shared_chunks=3, n=4, seed=1)):
         sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=5))
     sched.run_continuous()
@@ -327,7 +411,7 @@ def test_admission_off_reuses_but_never_inserts():
                  EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
                               prefill_mode="streaming", eos_id=EOS,
                               prefix_cache=True))
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD, prefix_admission="off")
+    sched = Scheduler(eng, prefix_admission="off")
     for i, prompt in enumerate(_prompts(shared_chunks=3, n=3, seed=2)):
         sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=2))
     sched.run_continuous()
@@ -357,7 +441,7 @@ def test_engine_eviction_respects_byte_budget():
                                 prefill_mode="streaming", eos_id=EOS,
                                 prefix_cache=True,
                                 prefix_cache_bytes=2 * per_chunk))
-    sched = Scheduler(small, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(small)
     prompts = _prompts(shared_chunks=1, n=5, seed=4)
     for i, prompt in enumerate(prompts):
         sched.submit(Request(rid=i, tokens=prompt, max_new_tokens=2))
@@ -409,3 +493,134 @@ def test_prefix_cache_config_validation():
         Engine(wmodel, wmodel.init(jax.random.PRNGKey(0)),
                EngineConfig(batch=1, capacity=64, policy=GEAR_POL,
                             prefill_mode="streaming", prefix_cache=True))
+
+
+def test_lifecycle_knob_validation():
+    with pytest.raises(ValueError, match="prefix_cache_eviction"):
+        EngineConfig(batch=1, capacity=64, policy=GEAR_POL,
+                     prefill_mode="streaming", prefix_cache=True,
+                     prefix_cache_eviction="mru")
+    with pytest.raises(ValueError, match="prefix_cache_ttl"):
+        EngineConfig(batch=1, capacity=64, policy=GEAR_POL,
+                     prefill_mode="streaming", prefix_cache=True,
+                     prefix_cache_ttl=-1.0)
+    with pytest.raises(ValueError, match="require prefix_cache"):
+        EngineConfig(batch=1, capacity=64, policy=GEAR_POL,
+                     prefill_mode="streaming", prefix_cache_ttl=5.0)
+
+
+def test_engine_set_params_invalidates_prefix_cache():
+    """Swapping weights bumps the engine's weight version; chunks cached
+    under the old version are pruned on the next walk, never reused."""
+    _engines()
+    model, params = _ENGINES["model"]
+    eng = Engine(model, params,
+                 EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                              prefill_mode="streaming", eos_id=EOS,
+                              prefix_cache=True))
+    (pa,) = _prompts(shared_chunks=3, n=1, seed=9)
+    batch1 = {"tokens": jnp.asarray(pa[None], jnp.int32)}
+    wc = eng.init_caches()
+    _, wc = eng.prefill_slot(batch1, wc, 0)
+    assert eng.prefix_cache.stats["nodes"] > 0
+    v0 = eng.weight_version
+    eng.set_params(params)                   # same values, new version
+    assert eng.weight_version == v0 + 1
+    _, wc = eng.prefill_slot(batch1, wc, 1)  # must NOT reuse stale chunks
+    st = eng.prefix_cache.stats
+    assert st["version_evictions"] > 0 and st["hit_chunks"] == 0
+    assert st["nodes"] > 0                   # re-admitted under new version
+    assert eng.prefix_cache.store.total_bytes == st["bytes"]
+
+
+def test_engine_ttl_expires_chunks_between_requests():
+    """With a TTL, a warm request arriving after expiry recomputes from
+    scratch — and still matches a cold engine bit for bit."""
+    _engines()
+    model, params = _ENGINES["model"]
+    clock = {"t": 0.0}
+    cold, _ = _engines()
+    eng = Engine(model, params,
+                 EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                              prefill_mode="streaming", eos_id=EOS,
+                              prefix_cache=True, prefix_cache_ttl=30.0))
+    eng.prefix_cache.trie.clock = lambda: clock["t"]
+    (pa,) = _prompts(shared_chunks=3, n=1, seed=10)
+    batch1 = {"tokens": jnp.asarray(pa[None], jnp.int32)}
+    cc, wc = cold.init_caches(), eng.init_caches()
+    lc, cc = cold.prefill_slot(batch1, cc, 0)
+    _, wc = eng.prefill_slot(batch1, wc, 0)
+    clock["t"] = 31.0                        # everything cached is now stale
+    lw, wc = eng.prefill_slot(batch1, wc, 1)
+    st = eng.prefix_cache.stats
+    assert st["expiries"] > 0 and st["hit_chunks"] == 0
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lw))
+    for a, b in zip(_slot_leaves(cc, 0), _slot_leaves(wc, 1)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_mixed_length_warm_equals_cold_bitwise(layout):
+    """The tentpole guarantee: two RAW requests of different, unaligned
+    lengths sharing a 2-chunk system prompt — the warm engine splices the
+    shared chunks and length-buckets each suffix, yet logits (and, dense,
+    the whole per-slot cache) stay bit-identical to a cold engine that
+    never saw the other request.
+
+    Both raw lengths sit in ONE length bucket: chunk bits are only
+    guaranteed reproducible within a jit program shape (XLA codegen is
+    per-shape), so bitwise parity requires the trie's seeding request and
+    the cold reference to share a bucket — cross-bucket reuse is
+    near-lossless, not bit-exact (DESIGN.md §4)."""
+    _engines()
+    model, params = _ENGINES["model"]
+    base = EngineConfig(batch=2, capacity=64, policy=GEAR_POL,
+                        prefill_mode="streaming", eos_id=EOS, layout=layout)
+    cold = Engine(model, params, base)
+    warm = Engine(model, params, dataclasses.replace(base, prefix_cache=True))
+    rng = np.random.RandomState(11)
+    shared = rng.randint(4, TINY.vocab_size, size=2 * NB)
+    prompts = [np.concatenate([shared, rng.randint(4, TINY.vocab_size, size=3)]),
+               np.concatenate([shared, rng.randint(4, TINY.vocab_size, size=6)])]
+    assert len({len(p) for p in prompts}) == 2          # genuinely mixed
+    assert all(len(p) % NB for p in prompts)            # unaligned suffixes
+    assert len({-(-len(p) // NB) for p in prompts}) == 1    # same bucket
+    cc, wc = cold.init_caches(), warm.init_caches()
+    for slot, prompt in enumerate(prompts):
+        batch1 = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+        lc, cc = cold.prefill_slot(batch1, cc, slot)
+        lw, wc = warm.prefill_slot(batch1, wc, slot)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lw))
+        if layout == "dense":
+            for a, b in zip(_slot_leaves(cc, slot), _slot_leaves(wc, slot)):
+                np.testing.assert_array_equal(a, b)
+    # the second request hit exactly the shared chunks, nothing more
+    assert warm.prefix_cache.stats["hit_chunks"] == 2
+    assert warm.prefix_cache.stats["prefill_toks_saved"] == 2 * NB
+
+
+def test_mixed_length_fallback_policy_serves_at_exact_length():
+    """kivi2 with group != chunk has no streaming layout, so the engine
+    cannot length-bucket; mixed raw-length prompts still serve (one exact-
+    length prefill program each) and match a monolithic engine bit for
+    bit through continuous batching."""
+    _engines()
+    model, params = _ENGINES["model"]
+    pol = dataclasses.replace(named_policy("gear_kivi2"), buffer_size=8,
+                              group=4, rank=2, rank_decode=2)
+    outs = {}
+    for mode in ("monolithic", "streaming"):
+        eng = Engine(model, params,
+                     EngineConfig(batch=2, capacity=64, policy=pol,
+                                  eos_id=EOS, prefill_mode=mode))
+        assert not eng._can_bucket
+        sched = Scheduler(eng)
+        rng = np.random.RandomState(3)
+        for i, n in enumerate((13, 21)):
+            sched.submit(Request(rid=i,
+                                 tokens=rng.randint(4, TINY.vocab_size, size=n),
+                                 max_new_tokens=4))
+        outs[mode] = {r.rid: r.tokens for r in sched.run_continuous()}
+    for rid in outs["monolithic"]:
+        np.testing.assert_array_equal(outs["monolithic"][rid],
+                                      outs["streaming"][rid])

@@ -137,7 +137,7 @@ def test_continuous_batching_serves_every_request_once(seed, n_reqs, data):
     budgets = [data.draw(st.integers(1, 8), label=f"budget{i}")
                for i in range(n_reqs)]
     order = data.draw(st.permutations(range(n_reqs)), label="submit_order")
-    sched = Scheduler(_sched_engine(), prompt_pad=6)
+    sched = Scheduler(_sched_engine())
     for i in order:
         sched.submit(Request(rid=i, tokens=rng.randint(1, 64, size=rng.randint(1, 7)),
                              max_new_tokens=budgets[i]))

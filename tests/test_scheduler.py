@@ -20,7 +20,7 @@ from repro.core.outlier import outlier_count
 from repro.core.policy import FP16, named_policy
 from repro.models.model import build_model
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.scheduler import Request, Scheduler, _pad, _truncate_eos
+from repro.serving.scheduler import Request, Scheduler, _pad
 
 EOS = 3
 PROMPT_PAD = 8
@@ -55,20 +55,25 @@ def _engines(kind):
     return _ENGINES[kind]
 
 
-def _requests(n=6, seed=0):
+def _requests(n=6, seed=0, length=None):
     rng = np.random.RandomState(seed)
     budgets = [6, 3, 9, 1, 5, 7, 2, 8][:n]
     return [Request(rid=i,
-                    tokens=rng.randint(4, 64, size=rng.randint(2, PROMPT_PAD + 1)),
+                    tokens=rng.randint(4, 64,
+                                       size=length or rng.randint(2, PROMPT_PAD + 1)),
                     max_new_tokens=b)
             for i, b in enumerate(budgets)]
 
 
 def _solo_reference(solo: Engine, req: Request) -> np.ndarray:
-    prompt = _pad(req.tokens, PROMPT_PAD)[None]
-    toks, _ = solo.generate({"tokens": jnp.asarray(prompt, jnp.int32)},
-                            req.max_new_tokens)
-    return _truncate_eos(np.asarray(toks)[0, : req.max_new_tokens], EOS)
+    """The request run alone through a batch-1 scheduler: the same raw-length
+    prefill path (including any engine-side length bucketing) as the batched
+    run, with no other slot live."""
+    sched = Scheduler(solo)
+    sched.submit(Request(rid=0, tokens=req.tokens,
+                         max_new_tokens=req.max_new_tokens))
+    (res,) = sched.run_continuous()
+    return res.tokens
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +84,7 @@ def _solo_reference(solo: Engine, req: Request) -> np.ndarray:
 def test_splice_isolation_bit_identical(kind):
     """Continuous-batched greedy output == solo output, token for token."""
     eng, solo = _engines(kind)
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     reqs = _requests()
     for r in reqs:
         sched.submit(r)
@@ -94,12 +99,17 @@ def test_splice_isolation_bit_identical(kind):
 
 @pytest.mark.parametrize("kind", ["gear", "fp16", "window"])
 def test_wave_and_continuous_agree(kind):
-    """Both scheduling modes return the same per-request greedy tokens."""
+    """Both scheduling modes return the same per-request greedy tokens.
+
+    Equal-length prompts: wave mode pads each wave to its longest raw
+    prompt, so only equal lengths give both modes the same prefill
+    program (the mixed-length caveat in the scheduler module docstring).
+    """
     eng, _ = _engines(kind)
-    reqs = _requests()
+    reqs = _requests(length=6)
     outs = []
     for mode in ("run", "run_continuous"):
-        sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+        sched = Scheduler(eng)
         for r in reqs:
             sched.submit(r)
         outs.append({r.rid: r.tokens for r in getattr(sched, mode)()})
@@ -109,7 +119,7 @@ def test_wave_and_continuous_agree(kind):
 
 def test_continuous_per_request_latency_and_budgets():
     eng, _ = _engines("gear")
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     reqs = _requests()
     for r in reqs:
         sched.submit(r)
@@ -136,7 +146,7 @@ def test_splice_isolation_through_interpret_kernel():
                         fused="interpret")
     eng = Engine(model, params, ecfg)
     solo = Engine(model, params, dataclasses.replace(ecfg, batch=1))
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     reqs = _requests(4)
     for r in reqs:
         sched.submit(r)
@@ -188,7 +198,7 @@ def test_decode_dispatches_fused_gear_attend(monkeypatch):
 
 def test_wave_results_truncated_at_own_eos():
     eng, _ = _engines("gear")
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     for r in _requests():
         sched.submit(r)
     for res in sched.run():
@@ -330,7 +340,7 @@ def test_splice_isolation_streaming_prefill():
                         prefill_mode="streaming")
     eng = Engine(model, params, ecfg)
     solo = Engine(model, params, dataclasses.replace(ecfg, batch=1))
-    sched = Scheduler(eng, prompt_pad=PROMPT_PAD)
+    sched = Scheduler(eng)
     reqs = _requests()
     for r in reqs:
         sched.submit(r)
@@ -447,6 +457,47 @@ def test_property_splice_after_streaming_prefill_bit_exact(seed, n_new, slot):
         others = [s for s in range(B) if s != slot]
         np.testing.assert_array_equal(got[others], before[others],
                                       err_msg=f"{name} (untouched rows)")
+
+
+_BUCKET_ENGINE: list = []
+
+
+def _bucket_engine() -> Engine:
+    if not _BUCKET_ENGINE:
+        cfg, pol = KINDS["gear"]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _BUCKET_ENGINE.append(Engine(model, params, EngineConfig(
+            batch=1, capacity=48, policy=pol, eos_id=-1,
+            prefill_mode="streaming")))
+    return _BUCKET_ENGINE[0]
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS, reason="hypothesis not installed")
+@given(n=hyp_st.integers(2, 40), seed=hyp_st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow] if HAS_HYPOTHESIS else [])
+def test_property_length_bucketing_preserves_logits(n, seed):
+    """Engine-side length bucketing (pad the prompt up to the next n_b
+    multiple, run the padded-tail streaming pipeline) never changes WHAT
+    the engine serves: cache lengths stay the raw length and the last-
+    position logits match an exact-length streaming prefill.  The bucketed
+    and exact tails attend at different static widths, so XLA may reorder
+    the tail reductions — logits agree to round-off, not necessarily
+    bit-for-bit.  (Warm vs cold BUCKETED runs, which share tail widths,
+    ARE bitwise — see tests/test_prefixcache.py.)"""
+    eng = _bucket_engine()
+    assert eng._can_bucket
+    rng = np.random.RandomState(seed)
+    toks = rng.randint(4, 64, size=n)
+    batch = {"tokens": jnp.asarray(toks[None], jnp.int32)}
+    exact_logits, _ = eng._prefill(eng.params, batch)
+    bucket_logits, bucket_caches = eng._cold_prefill(batch)
+    for c in bucket_caches:
+        np.testing.assert_array_equal(np.asarray(c.length), n)
+    np.testing.assert_allclose(
+        np.asarray(bucket_logits, np.float32),
+        np.asarray(exact_logits, np.float32), atol=0.05, rtol=0.05)
 
 
 def test_streaming_engine_falls_back_for_unsupported_layout():

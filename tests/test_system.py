@@ -68,7 +68,7 @@ def test_scheduler_drains_queue(dense_model):
     cfg, m, params = dense_model
     pol = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=16)
     eng = Engine(m, params, EngineConfig(batch=2, capacity=96, policy=pol))
-    sched = Scheduler(eng, prompt_pad=16)
+    sched = Scheduler(eng)
     for i in range(3):
         sched.submit(Request(rid=i, tokens=np.arange(5 + i) % cfg.vocab_size,
                              max_new_tokens=6))
