@@ -203,6 +203,70 @@ def fused_vs_xla(key, n_reqs: int = 8, batch: int = 4):
     return ratio
 
 
+def chaos_smoke(key, n_reqs: int = 10, batch: int = 4):
+    """Resilience smoke (``--chaos``): the same mixed-length continuous
+    workload run fault-free and under a seeded fault schedule.
+
+    Emits:
+
+    * ``chaos/faultfree_ok_rate`` — fraction of requests finishing ``OK``
+      on the clean path with the resilience layer armed (retry policy,
+      typed statuses, audits).  The regression gate's zero-drop rule pins
+      it at 1.0: the resilience machinery must never reject, degrade, or
+      fail a healthy request.
+    * ``chaos/degraded_decode_tok_per_s`` — decode tok/s under injected
+      pool exhaustion / NaN chunks / decode faults (informational:
+      degradation should be a slope, not a cliff — the run must still
+      terminate with every request accounted for and audits clean).
+    * ``chaos/fault_terminal_rate`` — fraction of requests terminally
+      REJECTED/FAILED under that schedule (informational).
+    """
+    from repro.serving import (FakeClock, FaultInjector, RequestStatus,
+                               RetryPolicy)
+    from repro.serving.scheduler import Scheduler
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"),
+                              buffer_size=16, rank=2, rank_decode=2)
+    eng = Engine(m, params, EngineConfig(batch=batch, capacity=96, policy=pol,
+                                         eos_id=-1, layout="paged"))
+
+    def drive(faults=None):
+        eng.attach_faults(None)          # detach the previous run's injector
+        sched = Scheduler(eng, faults=faults,
+                          retry=RetryPolicy(max_attempts=3, backoff_s=0.01))
+        for r in _mixed_requests(n_reqs, 16, cfg.vocab_size):
+            sched.submit(r)
+        results = sched.run_continuous()
+        rep = sched.audit(results)       # zero leaks even under faults
+        assert rep["ok"], rep["issues"]
+        return results, sched.last_stats
+
+    drive()                              # compile warmup
+    clean, cstats = drive()
+    ok_rate = sum(r.status is RequestStatus.OK for r in clean) / len(clean)
+    emit("chaos/faultfree_ok_rate", 0.0,
+         f"{len(clean)} requests, statuses={cstats['statuses']}",
+         value=ok_rate)
+    inj = FaultInjector(seed=0, clock=FakeClock(),
+                        rates={"pool_exhausted": 0.2, "nan_chunk": 0.1,
+                               "decode_error": 0.05})
+    faulty, fstats = drive(inj)
+    tok_s = fstats["tokens"] / max(fstats["decode_s"], 1e-9)
+    fired = {k: v for k, v in inj.fired.items() if v}
+    emit("chaos/degraded_decode_tok_per_s", 0.0,
+         f"{tok_s:.1f} tok/s under seeded faults fired={fired}", value=tok_s)
+    n_bad = sum(r.status in (RequestStatus.REJECTED, RequestStatus.FAILED)
+                for r in faulty)
+    emit("chaos/fault_terminal_rate", 0.0,
+         f"{n_bad}/{len(faulty)} REJECTED/FAILED, "
+         f"statuses={fstats['statuses']}")
+    assert ok_rate == 1.0, \
+        f"fault-free path failed requests: {cstats['statuses']}"
+    return ok_rate
+
+
 def run(key=None, smoke: bool = False, fused_only: bool = False):
     key = key if key is not None else jax.random.PRNGKey(0)
     if fused_only:
@@ -227,10 +291,16 @@ if __name__ == "__main__":
                     help="scheduler + fused-attend comparisons only")
     ap.add_argument("--fused", action="store_true",
                     help="only the fused-vs-XLA decode-attend comparison")
+    ap.add_argument("--chaos", action="store_true",
+                    help="resilience smoke: fault-free ok-rate + degraded "
+                         "throughput under a seeded fault schedule")
     ap.add_argument("--json", default=None,
                     help="also write the emitted rows to this JSON file")
     args = ap.parse_args()
-    run(smoke=args.smoke, fused_only=args.fused)
+    if args.chaos:
+        chaos_smoke(jax.random.PRNGKey(0))
+    else:
+        run(smoke=args.smoke, fused_only=args.fused)
     if args.json:
         from benchmarks.common import write_json
         write_json(args.json)

@@ -22,6 +22,9 @@ in the committed baseline against the freshly-measured rows and fails on:
 * ``*hit_rate*`` / ``*toks_saved*`` — ANY drop (the canned shared-prefix
   workload of bench_prefix is deterministic: fewer trie hits means the
   prefix cache stopped matching or admission broke, so zero tolerance);
+* ``*ok_rate*`` — ANY drop (bench_throughput ``--chaos``: the fault-FREE
+  path with the resilience layer armed must keep every request ``OK`` —
+  a drop means retries/valve/quarantine fired on healthy traffic);
 * ``*concurrent_over*`` — bench_paged's fixed-byte packing ratio: pure page
   arithmetic from the engine's own byte accounting, so ANY drop fails, plus
   an absolute >= 3x floor (the paged layout's headline capacity claim);
@@ -72,7 +75,8 @@ def load_rows(bench_dir: str) -> dict[str, float]:
 
 def governed(name: str) -> bool:
     return ("tok_per_s" in name or "nbytes" in name or "peak_bytes" in name
-            or "_over_" in name or "hit_rate" in name or "toks_saved" in name)
+            or "_over_" in name or "hit_rate" in name or "toks_saved" in name
+            or "ok_rate" in name)
 
 
 def check(baseline: dict[str, float], rows: dict[str, float],
@@ -84,7 +88,8 @@ def check(baseline: dict[str, float], rows: dict[str, float],
             failures.append(f"{name}: missing from bench output (baseline {ref:g})")
         elif "nbytes" in name and new > ref:
             failures.append(f"{name}: {new:g} bytes > baseline {ref:g} (any growth fails)")
-        elif ("hit_rate" in name or "toks_saved" in name) and new < ref - 1e-9:
+        elif (("hit_rate" in name or "toks_saved" in name
+               or "ok_rate" in name) and new < ref - 1e-9):
             failures.append(
                 f"{name}: {new:g} < baseline {ref:g} (deterministic canned "
                 "workload: any drop fails)")

@@ -72,6 +72,8 @@ __all__ = [
     "dense_kv",
     "extract_prefix_chunks",
     "splice_prefix_chunks",
+    "NumericFault",
+    "tree_finite",
     "splice_slot",
     "reset_slot",
     "prefill_into_slot",
@@ -1115,6 +1117,35 @@ def splice_prefix_chunks(cfg: CacheConfig, cache, slot, chunks: list[dict],
         upd[field] = jax.lax.dynamic_update_slice(
             dst, seg.astype(dst.dtype), tuple(starts))
     return dataclasses.replace(cache, **upd)
+
+
+class NumericFault(RuntimeError):
+    """A compressed chunk failed the NaN/Inf finiteness guard.
+
+    Raised at the two trust boundaries where a closed chunk becomes shared
+    state: the engine's post-prefill guard (before the batch-1 cache is
+    spliced into the live batched tree) and :meth:`ChunkStore.put` when the
+    prefix cache validates payloads on insert.  Quarantine semantics: the
+    poisoned request fails, its slot is reset and pages released, and no
+    trie node is created — co-batched requests never see the bad values.
+    """
+
+
+def tree_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every float/complex leaf of ``tree`` is fully finite.
+
+    Integer leaves (packed codes, sparse indices, lengths, page tables)
+    are skipped — they cannot hold NaN/Inf and the guard stays one fused
+    reduction over the few inexact leaves (quant stats, low-rank factors,
+    outlier values, streaming buffer).  Safe under ``jax.jit``; returns
+    True for a tree with no inexact leaves.
+    """
+    leaves = [x for x in jax.tree_util.tree_leaves(tree)
+              if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)]
+    ok = jnp.asarray(True)
+    for leaf in leaves:
+        ok = jnp.logical_and(ok, jnp.isfinite(leaf).all())
+    return ok
 
 
 # ---------------------------------------------------------------------------

@@ -77,11 +77,12 @@ class PrefixCache:
     """
 
     def __init__(self, chunk: int, budget_bytes: int, store=None,
-                 ttl: float = 0.0, eviction: str = "lru", clock=None):
+                 ttl: float = 0.0, eviction: str = "lru", clock=None,
+                 validate: bool = False):
         self.chunk = int(chunk)
         self.trie = RadixTrie(budget_bytes, ttl=ttl, eviction=eviction,
                               clock=clock)
-        self.store = ChunkStore() if store is None else store
+        self.store = ChunkStore(validate=validate) if store is None else store
         self._nbytes_of = getattr(self.store, "nbytes_of", payload_nbytes)
         self.toks_saved = 0
 
@@ -160,6 +161,14 @@ class PrefixCache:
         finally:
             self.trie.budget_bytes = budget
         return before - self.trie.total_bytes
+
+    def live_handles(self) -> list:
+        """Payload handles the trie owns (see :meth:`RadixTrie.live_handles`)."""
+        return self.trie.live_handles()
+
+    def audit(self) -> dict:
+        """Trie structural audit (see :meth:`RadixTrie.audit`)."""
+        return self.trie.audit()
 
     # ------------------------------------------------------------------
     @property

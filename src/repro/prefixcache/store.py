@@ -45,9 +45,18 @@ class ChunkStore:
     drives — ``put``/``get``/``free`` plus the ``nbytes_of`` pricing hook —
     is also implemented by :class:`repro.serving.pagedpool.PagePoolStore`,
     where handles are pool page ids rather than host copies.
+
+    ``validate=True`` adds numeric quarantine at the insert boundary: a
+    payload with any NaN/Inf leaf raises
+    :class:`~repro.core.cache.NumericFault` instead of being stored, so a
+    poisoned chunk can never be served to a later warm request.  (The
+    serving engine guards at prefill time, before chunks reach here; the
+    store-level check is the defense for direct :class:`PrefixCache`
+    users and the host-copy store path.)
     """
 
-    def __init__(self):
+    def __init__(self, validate: bool = False):
+        self.validate = bool(validate)
         self._entries: dict[int, tuple[Any, int]] = {}
         self._next_handle = 0
         self.total_bytes = 0
@@ -60,6 +69,9 @@ class ChunkStore:
         return len(self._entries)
 
     def put(self, payload) -> int:
+        if self.validate and not bool(cache_lib.tree_finite(payload)):
+            raise cache_lib.NumericFault(
+                "chunk payload holds NaN/Inf; refusing to cache it")
         handle = self._next_handle
         self._next_handle += 1
         nbytes = payload_nbytes(payload)

@@ -317,6 +317,51 @@ class RadixTrie:
                                       parent))
         return evicted
 
+    def live_handles(self) -> list[Any]:
+        """Every payload handle the trie currently owns (one per node).
+
+        The engine feeds this to :meth:`PagePool.audit` as the retained
+        multiset, closing the refcount accounting loop: a page is live iff
+        it is in a block table or behind one of these handles.  Handles in
+        ``pending_free`` are NOT included — they are already disowned and
+        waiting for the facade to free them in the store.
+        """
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            out.append(nd.handle)
+            stack.extend(nd.children.values())
+        return out
+
+    def audit(self) -> dict:
+        """Structural invariant audit; returns a report, never raises.
+
+        Recounts nodes and bytes against the incremental counters, checks
+        parent/child back-pointers, and flags negative refcounts.  Cheap
+        (one walk), so chaos tests run it after every schedule.
+        """
+        issues: list[str] = []
+        n, nbytes = 0, 0
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            for key, child in nd.children.items():
+                if child.parent is not nd:
+                    issues.append(f"node {key!r}: broken parent pointer")
+                if child.key != key:
+                    issues.append(f"node {key!r}: edge/key mismatch {child.key!r}")
+                if child.refs < 0:
+                    issues.append(f"node {key!r}: negative refcount {child.refs}")
+                n += 1
+                nbytes += child.nbytes
+                stack.append(child)
+        if n != self.n_nodes:
+            issues.append(f"n_nodes counter {self.n_nodes} != walked {n}")
+        if nbytes != self.total_bytes:
+            issues.append(f"total_bytes counter {self.total_bytes} != walked {nbytes}")
+        return {"ok": not issues, "issues": issues, "n_nodes": n,
+                "total_bytes": nbytes, "pending_free": len(self.pending_free)}
+
     def clear(self) -> list[Any]:
         """Drop every node (ignores pins — callers must hold none).
         Returns all payload handles for the caller's store."""

@@ -13,14 +13,23 @@ from here rather than from the submodules:
   — the slot-protocol facade the scheduler drives;
 * the paged pool primitives (:class:`PagePool`, :class:`PagePoolStore`,
   :class:`PoolExhausted`, :func:`pages_needed`) for tooling that inspects
-  admission state.
+  admission state;
+* the resilience layer (docs/serving.md §4): :class:`RequestStatus` /
+  :class:`RetryPolicy` / :class:`AdmissionValve` lifecycle primitives,
+  :class:`NumericFault` quarantine, and the chaos-test harness
+  (:class:`FaultInjector`, :class:`FaultEvent`, :class:`FakeClock`,
+  :class:`InjectedFault`).
 """
 
+from repro.core.cache import NumericFault
 from repro.serving.engine import (AttendPath, CacheLayout, Engine,
                                   EngineConfig, PrefillMode,
                                   prefix_cache_unsupported_reason)
+from repro.serving.faults import (FakeClock, FaultEvent, FaultInjector,
+                                  InjectedFault)
 from repro.serving.pagedpool import (PagePool, PagePoolStore, PoolExhausted,
                                      pages_needed)
+from repro.serving.resilience import AdmissionValve, RequestStatus, RetryPolicy
 from repro.serving.sampling import sample
 from repro.serving.scheduler import Request, Result, Scheduler
 from repro.serving.views import CacheView, DenseCacheView, PagedCacheView
@@ -31,5 +40,7 @@ __all__ = [
     "Scheduler", "Request", "Result",
     "CacheView", "DenseCacheView", "PagedCacheView",
     "PagePool", "PagePoolStore", "PoolExhausted", "pages_needed",
+    "RequestStatus", "RetryPolicy", "AdmissionValve", "NumericFault",
+    "FaultInjector", "FaultEvent", "FakeClock", "InjectedFault",
     "sample",
 ]

@@ -129,6 +129,15 @@ class EngineConfig:
     # bumps a version tag that makes every cached chunk stale at once.
     prefix_cache_ttl: float = 0.0
     prefix_cache_eviction: str = "lru"
+    # Numeric quarantine: guard every request's freshly closed compressed
+    # chunks against NaN/Inf before they are spliced into the shared batch
+    # tree or inserted into the prefix trie.  A poisoned prefill raises
+    # :class:`~repro.core.cache.NumericFault` with the shared state
+    # untouched — the scheduler fails that one request (FAILED status,
+    # slot reset, pages released) while co-batched slots continue
+    # bit-identically.  One fused all-finite reduction over the batch-1
+    # tree per prefill; set False to shave it off a trusted pipeline.
+    numeric_guard: bool = True
     # Cache layout (:class:`CacheLayout`); strings are coerced.  PAGED puts
     # every GEAR-compressible attention layer's closed chunks into a global
     # page pool; window/fp16/RWKV/SSM state stays dense inside the tree.
@@ -201,12 +210,19 @@ def prefix_cache_unsupported_reason(cfg, policy: CompressionPolicy,
 
 
 class Engine:
-    def __init__(self, model: Model, params: Any, ecfg: EngineConfig, mesh=None):
+    def __init__(self, model: Model, params: Any, ecfg: EngineConfig, mesh=None,
+                 clock=None):
         self.model = model
         self.cfg = model.cfg
         self.ecfg = ecfg
         self.mesh = mesh
         self.layout = ecfg.layout
+        # injectable monotonic clock shared with the prefix cache's TTL
+        # logic (tests drive a FakeClock); None = real time
+        self._clock = clock
+        # chaos hook (serving/faults.py); attach_faults wires it + the pool
+        self._faults = None
+        self._finite_fn = jax.jit(cache_lib.tree_finite)
         cap = self._cap()
 
         if mesh is not None:
@@ -290,7 +306,9 @@ class Engine:
             self.prefix_cache = PrefixCache(ecfg.policy.buffer_size,
                                             ecfg.prefix_cache_bytes, store=store,
                                             ttl=ecfg.prefix_cache_ttl,
-                                            eviction=ecfg.prefix_cache_eviction)
+                                            eviction=ecfg.prefix_cache_eviction,
+                                            clock=self._clock,
+                                            validate=ecfg.numeric_guard)
             self._cache_cfgs = [cache_cfg_for(self.cfg, kind, ecfg.policy, 1, cap)
                                 for kind in self.cfg.layer_pattern]
             # per-shape jitted programs for the hit path, keyed by the
@@ -358,13 +376,15 @@ class Engine:
         are page ids into the pool being discarded, a fresh prefix trie)."""
         self.pool = PagePool(self._n_pages, self.ecfg.batch, self._n_chunks,
                              self._page_bytes)
+        self.pool.faults = self._faults
         self._bt = jnp.asarray(self.pool.block_tables)
         if getattr(self, "prefix_cache", None) is not None:
             self.prefix_cache = PrefixCache(self.ecfg.policy.buffer_size,
                                             self.ecfg.prefix_cache_bytes,
                                             store=PagePoolStore(self.pool),
                                             ttl=self.ecfg.prefix_cache_ttl,
-                                            eviction=self.ecfg.prefix_cache_eviction)
+                                            eviction=self.ecfg.prefix_cache_eviction,
+                                            clock=self._clock)
 
     def _cap(self) -> int:
         nb = self.ecfg.policy.buffer_size
@@ -389,6 +409,53 @@ class Engine:
             return "xla"
         return ("fused-interpret" if self.ecfg.fused is AttendPath.INTERPRET
                 else "fused")
+
+    # ------------------------------------------------------------------
+    def attach_faults(self, injector) -> None:
+        """Wire a :class:`~repro.serving.faults.FaultInjector` into the
+        engine's chaos hooks (prefill corruption here, admission faults in
+        the page pool).  ``None`` detaches.  Production never calls this —
+        the scheduler does, when constructed with ``faults=...``."""
+        self._faults = injector
+        if self.pool is not None:
+            self.pool.faults = injector
+
+    def _guard_one(self, one):
+        """Numeric quarantine boundary for one request's batch-1 cache tree.
+
+        Runs after the (cold or suffix) prefill and before anything shares
+        the result — the batched splice, the trie insert, the page
+        scatter.  The chaos injector's NaN corruption lands here too, so
+        an injected poisoned chunk takes exactly the path a real one
+        would.  Raises :class:`~repro.core.cache.NumericFault` with all
+        shared state untouched; read-only otherwise (bit-identity safe).
+        """
+        if self._faults is not None:
+            one = self._faults.corrupt_tree(one)
+        if self.ecfg.numeric_guard and not bool(self._finite_fn(one)):
+            raise cache_lib.NumericFault(
+                "prefill produced NaN/Inf in a compressed chunk; "
+                "quarantining this request (shared cache state untouched)")
+        return one
+
+    def audit(self) -> dict:
+        """Cross-structure invariant audit: page pool refcounts against
+        block tables + live trie handles, plus the trie's own structural
+        audit.  Returns ``{"ok", "issues", ...}``; never raises — the
+        chaos suite asserts on it after every fault schedule."""
+        issues: list[str] = []
+        report: dict[str, Any] = {}
+        if self.pool is not None:
+            retained = None
+            if self.prefix_cache is not None:
+                retained = ([int(h) for h in self.prefix_cache.live_handles()]
+                            + [int(h) for h in self.prefix_cache.trie.pending_free])
+            report["pool"] = self.pool.audit(retained=retained)
+            issues += [f"pool: {m}" for m in report["pool"]["issues"]]
+        if self.prefix_cache is not None:
+            report["trie"] = self.prefix_cache.audit()
+            issues += [f"trie: {m}" for m in report["trie"]["issues"]]
+        return {"ok": not issues, "issues": issues, **report}
 
     # ------------------------------------------------------------------
     def set_params(self, params: Any) -> None:
@@ -496,6 +563,7 @@ class Engine:
                                             reserve_tokens)
         if self.prefix_cache is None:
             logits, one = self._cold_prefill(batch1)
+            one = self._guard_one(one)
             return logits, self._splice_donate_one(caches, one,
                                                    jnp.asarray(slot, jnp.int32))
         tokens = np.asarray(batch1["tokens"][0])
@@ -512,6 +580,7 @@ class Engine:
                 logits, one = self._prefill_suffix(tokens, n_hit, one1)
             else:
                 logits, one = self._cold_prefill(batch1)
+            one = self._guard_one(one)
             if admit and n // nb > n_hit:
                 payloads = self._extract_fn(n_hit, n // nb)(one)
                 self.prefix_cache.insert(tokens, payloads, start_chunk=n_hit)
@@ -557,13 +626,21 @@ class Engine:
                 self.pool.release_slot(slot)
             # host-side reservation FIRST — PoolExhausted costs no device work
             fresh = self.pool.admit(slot, n_total, shared=shared)
-            if n_hit:
-                one1 = self._gather_scaffold(
-                    caches, self._fresh_batch1(),
-                    jnp.asarray(shared, jnp.int32))
-                logits, one = self._prefill_suffix(tokens, n_hit, one1)
-            else:
-                logits, one = self._cold_prefill(batch1)
+            try:
+                if n_hit:
+                    one1 = self._gather_scaffold(
+                        caches, self._fresh_batch1(),
+                        jnp.asarray(shared, jnp.int32))
+                    logits, one = self._prefill_suffix(tokens, n_hit, one1)
+                else:
+                    logits, one = self._cold_prefill(batch1)
+                # quarantine BEFORE the donating splice: on failure the live
+                # tree is untouched and the reservation rolls back below
+                one = self._guard_one(one)
+            except BaseException:
+                self.pool.release_slot(slot)
+                self._bt = jnp.asarray(self.pool.block_tables)
+                raise
             n_sc = n_closed - n_hit
             caches = self._paged_splice_fn(n_hit)(
                 caches, one,

@@ -1,0 +1,200 @@
+"""Seeded, deterministic fault injection for the serving stack.
+
+The chaos harness behind tests/test_chaos.py and ``bench_throughput
+--chaos``: a :class:`FaultInjector` fires faults at well-defined **sites**
+in the request lifecycle, either probabilistically (seeded per-site RNGs,
+so one site's rate never perturbs another's stream) or at exact visit
+indices (:class:`FaultEvent` schedules).  The same ``(seed, rates,
+schedule)`` triple always produces the same fault sequence for the same
+workload — which is what lets the chaos properties compare a faulty run
+against its fault-free twin token-for-token.
+
+Sites and what firing does:
+
+* ``pool_exhausted`` — :meth:`~repro.serving.pagedpool.PagePool.admit`
+  raises :class:`~repro.serving.pagedpool.PoolExhausted` with no state
+  change, exercising the scheduler's bounded-retry / rejection path.
+* ``nan_chunk`` — the batch-1 prefill's cache tree gets one NaN written
+  into its first float leaf before the engine's numeric guard runs,
+  exercising quarantine (:class:`~repro.core.cache.NumericFault` →
+  ``FAILED`` for that request only).
+* ``prefill_error`` / ``decode_error`` — an :class:`InjectedFault` is
+  raised *before* the jitted step is dispatched (so no donated buffer is
+  ever consumed by a failed call), exercising step-retry and the
+  all-active-``FAILED`` abort.
+* ``clock_skew`` — the injector's :class:`FakeClock` jumps forward by
+  ``skew_s``, expiring prefix-cache TTLs mid-run.
+* ``trie_evict`` — the engine's prefix cache is force-evicted down to
+  nothing (pinned paths survive, by the trie's refcount rules),
+  exercising eviction-mid-flight.
+
+The injector is attached by the scheduler (``Scheduler(engine,
+faults=...)``), which wires the engine and its page pool; nothing in the
+production path references this module unless an injector is attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import NumericFault
+
+__all__ = ["FAULT_SITES", "FakeClock", "FaultEvent", "FaultInjector",
+           "InjectedFault", "NumericFault"]
+
+FAULT_SITES = ("pool_exhausted", "nan_chunk", "prefill_error", "decode_error",
+               "clock_skew", "trie_evict")
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately-raised engine-step fault (transient by construction).
+
+    Distinct from real error types so production handlers can never
+    confuse a chaos-test fault with an organic failure; the scheduler
+    treats it like any transient engine-step exception (bounded retry,
+    then ``FAILED``).
+    """
+
+    def __init__(self, msg: str, site: str = ""):
+        super().__init__(msg)
+        self.site = site
+
+
+class FakeClock:
+    """Injectable monotonic-seconds source whose ``sleep`` advances time.
+
+    Drop-in for the trie's ``clock`` knob, the scheduler's ``clock`` /
+    ``sleep`` pair, and the injector's skew target — one instance shared
+    across all three makes TTL expiry, deadlines, and backoff waits
+    deterministic in tests (no real sleeping, no wall-clock flake).
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.t += dt
+
+    def sleep(self, dt: float) -> None:
+        self.advance(max(float(dt), 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """Fire ``site`` deterministically on its ``at``-th visit (0-based)."""
+
+    site: str
+    at: int
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"sites: {FAULT_SITES}")
+        if self.at < 0:
+            raise ValueError(f"event index must be >= 0, got {self.at}")
+
+
+class FaultInjector:
+    """Deterministic fault source: per-site seeded rates + exact schedules.
+
+    ``rates`` maps site name → per-visit fire probability; ``schedule`` is
+    a sequence of :class:`FaultEvent` firing at exact visit indices
+    (schedules and rates compose — a visit fires if either says so).
+    Each site draws from its own ``RandomState`` seeded by ``(seed,
+    site_index)``, so enabling one site never shifts another site's
+    stream.  ``fired`` / ``visits`` counters and the ``log`` of
+    ``(site, visit_index)`` firings make every chaos run auditable.
+    """
+
+    def __init__(self, seed: int = 0,
+                 rates: dict[str, float] | None = None,
+                 schedule: Sequence[FaultEvent] = (),
+                 clock: FakeClock | None = None,
+                 skew_s: float = 3600.0,
+                 evict_bytes: int = 1 << 62):
+        rates = dict(rates or {})
+        unknown = set(rates) - set(FAULT_SITES)
+        if unknown:
+            raise ValueError(f"unknown fault sites {sorted(unknown)}; "
+                             f"sites: {FAULT_SITES}")
+        for site, rate in rates.items():
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"rate for {site!r} must be in [0, 1], got {rate}")
+        self.rates = rates
+        self._sched: dict[str, set[int]] = {s: set() for s in FAULT_SITES}
+        for ev in schedule:
+            self._sched[ev.site].add(ev.at)
+        self._rngs = {site: np.random.RandomState([int(seed) & 0x7FFFFFFF, i])
+                      for i, site in enumerate(FAULT_SITES)}
+        self.clock = clock
+        self.skew_s = float(skew_s)
+        self.evict_bytes = int(evict_bytes)
+        self.visits = {s: 0 for s in FAULT_SITES}
+        self.fired = {s: 0 for s in FAULT_SITES}
+        self.log: list[tuple[str, int]] = []
+
+    def fire(self, site: str) -> bool:
+        """One visit to ``site``; True when a fault should fire now."""
+        i = self.visits[site]
+        self.visits[site] = i + 1
+        rate = self.rates.get(site, 0.0)
+        hit = i in self._sched[site]
+        if rate > 0.0:
+            # always consume the draw so the stream is schedule-independent
+            hit = bool(self._rngs[site].random_sample() < rate) or hit
+        if hit:
+            self.fired[site] += 1
+            self.log.append((site, i))
+        return hit
+
+    # -- site hooks ---------------------------------------------------------
+    def on_admit(self, slot: int) -> None:
+        """Called by :meth:`PagePool.admit` before any state change."""
+        if self.fire("pool_exhausted"):
+            from repro.serving.pagedpool import PoolExhausted
+            raise PoolExhausted(f"slot {slot}: injected pool exhaustion")
+
+    def check_step(self, which: str) -> None:
+        """Called by the scheduler before dispatching a prefill/decode step."""
+        if self.fire(f"{which}_error"):
+            raise InjectedFault(f"injected {which} engine-step fault",
+                                site=f"{which}_error")
+
+    def corrupt_tree(self, tree: Any) -> Any:
+        """NaN-poison the first float leaf of a batch-1 cache tree.
+
+        Called by the engine between the prefill and its numeric guard —
+        the poisoned tree is exactly what a corrupted compression event
+        would have produced, so the guard (not the injector) decides the
+        request's fate.
+        """
+        if not self.fire("nan_chunk"):
+            return tree
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        for i, leaf in enumerate(leaves):
+            if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.inexact):
+                idx = tuple(0 for _ in leaf.shape)
+                leaves[i] = leaf.at[idx].set(jnp.nan)
+                break
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def tick(self, engine) -> None:
+        """Per-scheduler-iteration environmental faults (skew, eviction)."""
+        if self.clock is not None and self.fire("clock_skew"):
+            self.clock.advance(self.skew_s)
+        pc = getattr(engine, "prefix_cache", None)
+        if pc is not None and self.fire("trie_evict"):
+            pc.evict_bytes(self.evict_bytes)

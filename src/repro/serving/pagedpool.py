@@ -87,6 +87,9 @@ class PagePool:
         self._slot_n = np.zeros(batch, np.int64)   # pages held per slot
         self.stats = {"admits": 0, "rejects": 0, "shared_pages": 0,
                       "fresh_pages": 0, "freed_pages": 0}
+        # chaos hook: a FaultInjector (serving/faults.py) whose on_admit
+        # may raise PoolExhausted before any state change; None in prod
+        self.faults = None
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -129,6 +132,12 @@ class PagePool:
             raise ValueError(
                 f"request needs {n_total} pages but the block table has "
                 f"{self.n_chunks} chunk entries (capacity bound)")
+        if self.faults is not None:
+            try:
+                self.faults.on_admit(slot)
+            except PoolExhausted:
+                self.stats["rejects"] += 1
+                raise
         n_fresh = n_total - len(shared)
         if n_fresh > len(self._free):
             self.stats["rejects"] += 1
@@ -201,12 +210,62 @@ class PagePool:
     def check(self) -> None:
         """Invariant audit (tests): every page is exactly free or live,
         and live counts equal table occurrences + store retains."""
+        rep = self.audit()
+        assert rep["ok"], rep["issues"]
+
+    def audit(self, retained: Sequence[int] | None = None) -> dict:
+        """Structural invariant audit; returns a report, never raises.
+
+        Always checked: the free list has no duplicates and never holds
+        page 0; every page is *exactly* one of free or live (refcount >
+        0); every block-table entry within a slot's extent is live;
+        entries past the extent are 0.  When ``retained`` — the full
+        multiset of pages the prefix trie currently holds handles on — is
+        supplied, refcounts are checked *exactly*: each page's count must
+        equal its block-table occurrences plus its retained-handle count,
+        and any live page with neither is reported in ``leaked_pages``.
+        Without ``retained`` (callers that cannot see the trie), only the
+        structural invariants run.
+        """
+        issues: list[str] = []
         free = set(self._free)
-        assert 0 not in free
-        assert len(free) == len(self._free), "free list has duplicates"
+        if 0 in free:
+            issues.append("zero page on the free list")
+        if len(free) != len(self._free):
+            issues.append("free list has duplicates")
         for p in range(1, self.n_pages):
             live = self._refs[p] > 0
-            assert live != (p in free), (p, self._refs[p], p in free)
+            if self._refs[p] < 0:
+                issues.append(f"page {p}: negative refcount {self._refs[p]}")
+            if live == (p in free):
+                issues.append(f"page {p}: refs={self._refs[p]} free={p in free}")
+        table_occ = np.zeros(self.n_pages, np.int64)
+        for b in range(self.batch):
+            n = int(self._slot_n[b])
+            for p in self.block_tables[b, :n]:
+                p = int(p)
+                if not 0 <= p < self.n_pages:
+                    issues.append(f"slot {b}: table entry {p} out of range")
+                    continue
+                table_occ[p] += 1
+                if p != 0 and self._refs[p] <= 0:
+                    issues.append(f"slot {b}: dead page {p} in block table")
+            if np.any(self.block_tables[b, n:] != 0):
+                issues.append(f"slot {b}: nonzero table entries past extent {n}")
+        leaked: list[int] = []
+        if retained is not None:
+            held = np.zeros(self.n_pages, np.int64)
+            for p in retained:
+                held[int(p)] += 1
+            for p in range(1, self.n_pages):
+                expect = int(table_occ[p] + held[p])
+                if int(self._refs[p]) != expect:
+                    issues.append(f"page {p}: refs={int(self._refs[p])} but "
+                                  f"tables+handles={expect}")
+                if self._refs[p] > 0 and expect == 0:
+                    leaked.append(p)
+        return {"ok": not issues, "issues": issues, "leaked_pages": leaked,
+                "free_pages": len(self._free), "used_pages": self.used_pages}
 
 
 class PagePoolStore:

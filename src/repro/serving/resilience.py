@@ -1,0 +1,120 @@
+"""Request-lifecycle resilience primitives for the serving layer.
+
+GEAR's serving stack promises *near-lossless* numerics; this module is
+about what happens when the numerics — or the capacity planning — go
+wrong.  It defines the typed request-terminal states and the two knobs the
+scheduler uses to turn unbounded failure loops into bounded, observable
+outcomes:
+
+* :class:`RequestStatus` — every submitted request terminates with exactly
+  one :class:`~repro.serving.scheduler.Result` carrying one of these
+  statuses.  ``OK`` and ``DEGRADED`` results carry bit-exact tokens (a
+  retried or fault-adjacent request is *slower*, never *different* — the
+  splice-isolation guarantee survives faults); ``TIMEOUT`` carries the
+  tokens generated before the deadline; ``REJECTED`` / ``FAILED`` carry
+  whatever partial output existed when the request was terminated.
+
+* :class:`RetryPolicy` — bounded admission retries with exponential
+  backoff.  A transient :class:`~repro.serving.pagedpool.PoolExhausted`
+  (or an injected engine-step fault) requeues the request at most
+  ``max_attempts`` times; past that the scheduler surfaces a terminal
+  ``REJECTED`` (capacity) / ``FAILED`` (fault) result instead of spinning.
+  Backoff waits run on the scheduler's injectable clock/sleep pair, so
+  chaos tests drive them with a :class:`~repro.serving.faults.FakeClock`.
+
+* :class:`AdmissionValve` — load shedding at submit time: beyond
+  ``max_queue`` waiting requests, new submissions are immediately recorded
+  as ``REJECTED`` results (delivered by the next run) rather than queued
+  behind work that cannot complete in time.
+
+See docs/serving.md §4 ("Failure modes & degradation") for the operator
+view and tests/test_chaos.py for the invariants these must uphold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+__all__ = ["RequestStatus", "RetryPolicy", "AdmissionValve"]
+
+
+class RequestStatus(str, enum.Enum):
+    """Terminal state of one served request.
+
+    ``OK``        — completed; tokens are bit-identical to a solo run.
+    ``DEGRADED``  — completed with bit-identical tokens, but service was
+                    impaired en route: admission needed more than one
+                    attempt, or a decode step the request was part of hit
+                    an (injected) engine fault and was retried.  The
+                    status flags the SLO impact; the payload is exact.
+    ``TIMEOUT``   — the request's ``deadline_s`` elapsed; the result keeps
+                    the tokens generated before the cutoff (possibly none,
+                    if the deadline passed while still queued).
+    ``REJECTED``  — never admitted: the load-shedding valve shed it at
+                    submit, or admission exhausted ``RetryPolicy.max_attempts``
+                    under sustained pool pressure.
+    ``FAILED``    — terminated by a fault: a NaN/Inf-poisoned compressed
+                    chunk (numeric quarantine), or repeated engine-step
+                    exceptions.  The slot was reset and its pages
+                    released; co-batched requests are unaffected.
+    """
+
+    OK = "ok"
+    TIMEOUT = "timeout"
+    REJECTED = "rejected"
+    DEGRADED = "degraded"
+    FAILED = "failed"
+
+    __str__ = str.__str__
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-retry + exponential-backoff policy for admission failures.
+
+    ``max_attempts`` caps how many times one request's admission (or one
+    batched decode step) may fail before the scheduler surfaces a terminal
+    status.  ``backoff_s`` is the wait after the first failure, multiplied
+    by ``backoff_mult`` per subsequent failure and clamped to
+    ``max_backoff_s``; the default ``backoff_s=0`` keeps the fault-free
+    hot path free of sleeps (retries ride the natural decode-step cadence).
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.0
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.backoff_s < 0 or self.max_backoff_s < 0 or self.backoff_mult < 1:
+            raise ValueError("backoff knobs must be non-negative (mult >= 1)")
+
+    def backoff(self, attempt: int) -> float:
+        """Seconds to wait after failed attempt number ``attempt`` (1-based)."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        return min(self.backoff_s * self.backoff_mult ** max(attempt - 1, 0),
+                   self.max_backoff_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionValve:
+    """Submit-time load shedding.
+
+    ``max_queue`` bounds the scheduler's wait queue: a submit that would
+    make the queue longer is recorded as an immediate ``REJECTED`` result
+    (delivered with the next run's results) instead of being enqueued.
+    ``None`` disables shedding.  Shedding at submit — rather than deep in
+    the admission loop — keeps rejection latency flat under overload: the
+    caller learns immediately, and queued requests' wait times stay
+    bounded by queue length × service time.
+    """
+
+    max_queue: int | None = None
+
+    def shed(self, queue_len: int) -> bool:
+        """True when a new submission should be rejected at depth ``queue_len``."""
+        return self.max_queue is not None and queue_len >= self.max_queue

@@ -45,17 +45,22 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import Counter, deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import NumericFault
 from repro.serving.engine import Engine
+from repro.serving.faults import InjectedFault
 from repro.serving.pagedpool import PoolExhausted, pages_needed
+from repro.serving.resilience import AdmissionValve, RequestStatus, RetryPolicy
 from repro.serving.sampling import sample
 
 __all__ = ["Request", "Result", "Scheduler"]
+
+_EMPTY = np.zeros(0, np.int32)
 
 
 @dataclasses.dataclass
@@ -63,6 +68,11 @@ class Request:
     rid: int
     tokens: np.ndarray            # [prompt_len] int32
     max_new_tokens: int = 64
+    # seconds from submit until the request times out (scheduler clock);
+    # None = no deadline.  A queued request past its deadline is dropped
+    # with an empty TIMEOUT result; a running one keeps the tokens it
+    # generated before the cutoff.
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -71,6 +81,12 @@ class Result:
     tokens: np.ndarray            # generated ids, truncated at first EOS
     prefill_s: float
     decode_s: float
+    # typed terminal state (resilience layer, docs/serving.md §4); OK and
+    # DEGRADED both carry bit-identical tokens — DEGRADED only flags that
+    # service was impaired (admission retried / a decode step was retried)
+    status: RequestStatus = RequestStatus.OK
+    attempts: int = 1             # admission attempts consumed (1 = clean)
+    error: str = ""               # human-readable cause for non-OK statuses
 
 
 class Scheduler:
@@ -87,16 +103,50 @@ class Scheduler:
     closed prompt chunks into the trie; "off" reuses cached prefixes but
     admits nothing new (e.g. a bursty one-off workload that would churn
     the eviction budget).
+
+    Resilience knobs (docs/serving.md §4):
+
+    * ``retry`` — :class:`~repro.serving.resilience.RetryPolicy` bounding
+      admission retries under pool pressure (and decode-step fault
+      retries) with exponential backoff; past the cap the request gets a
+      terminal ``REJECTED`` (capacity) / ``FAILED`` (fault) result
+      instead of spinning.
+    * ``valve`` — :class:`~repro.serving.resilience.AdmissionValve` load
+      shedding at :meth:`submit`: beyond ``max_queue`` waiting requests,
+      submissions are recorded as immediate ``REJECTED`` results.
+    * ``faults`` — a :class:`~repro.serving.faults.FaultInjector`; the
+      scheduler wires it into the engine + pool hooks and drives its
+      per-iteration environmental faults.  Never set in production.
+    * ``clock`` / ``sleep`` — injectable monotonic-seconds source and
+      sleeper for deadlines and backoff waits (default: the injector's
+      FakeClock when it has one, else ``time.monotonic``/``time.sleep``);
+      wall-clock *stats* always use real time.
     """
 
-    def __init__(self, engine: Engine, prefix_admission: str = "all"):
+    def __init__(self, engine: Engine, prefix_admission: str = "all",
+                 retry: RetryPolicy | None = None,
+                 valve: AdmissionValve | None = None,
+                 faults=None, clock=None, sleep=None):
         if prefix_admission not in ("all", "off"):
             raise ValueError(
                 f"prefix_admission must be all/off, got {prefix_admission!r}")
         self.engine = engine
         self.prefix_admission = prefix_admission
+        self.retry = RetryPolicy() if retry is None else retry
+        self.valve = AdmissionValve() if valve is None else valve
+        self._faults = faults
+        if faults is not None:
+            engine.attach_faults(faults)
+            if clock is None:
+                clock = faults.clock
+        self._clock = time.monotonic if clock is None else clock
+        self._sleep = (sleep if sleep is not None
+                       else getattr(clock, "sleep", time.sleep))
         self.queue: deque[Request] = deque()
         self.last_stats: dict = {}
+        self.submitted_rids: list[int] = []
+        self._submit_t: dict[int, float] = {}
+        self._shed: list[Result] = []
 
     def _need_tokens(self, req: Request) -> int:
         """Cache tokens a request's whole lifetime holds: its raw prompt
@@ -134,7 +184,35 @@ class Scheduler:
                     f"engine can ever allocate at most {most} to one slot "
                     f"({pool.n_pages - 1} allocatable, {pool.n_chunks} "
                     "block-table entries)")
+        self.submitted_rids.append(req.rid)
+        self._submit_t[req.rid] = self._clock()
+        if self.valve.shed(len(self.queue)):
+            # load shedding: an immediate terminal result (delivered with
+            # the next run) beats queueing behind work that cannot finish
+            self._shed.append(Result(
+                rid=req.rid, tokens=_EMPTY, prefill_s=0.0, decode_s=0.0,
+                status=RequestStatus.REJECTED, attempts=0,
+                error=f"shed at submit: queue at max_queue={self.valve.max_queue}"))
+            return
         self.queue.append(req)
+
+    def _drain_shed(self) -> list[Result]:
+        out, self._shed = self._shed, []
+        return out
+
+    def audit(self, results: list[Result]) -> dict:
+        """Post-run invariant report: every submitted rid terminated with
+        exactly ONE result, plus the engine's pool/trie audit.  ``results``
+        is everything collected from this scheduler's runs.  Never raises.
+        """
+        counts = Counter(r.rid for r in results)
+        issues = [f"rid {rid}: {counts.get(rid, 0)} results (want 1)"
+                  for rid in self.submitted_rids if counts.get(rid, 0) != 1]
+        issues += [f"rid {rid}: result without a submit"
+                   for rid in counts if rid not in set(self.submitted_rids)]
+        eng_report = self.engine.audit()
+        issues += eng_report["issues"]
+        return {"ok": not issues, "issues": issues, "engine": eng_report}
 
     # ------------------------------------------------------------------
     # Wave mode
@@ -147,7 +225,7 @@ class Scheduler:
         composition — use :meth:`run_continuous` when per-request
         reproducibility or prefix-cache reuse matters.
         """
-        results: list[Result] = []
+        results: list[Result] = self._drain_shed()
         B = self.engine.ecfg.batch
         eos = self.engine.ecfg.eos_id
         t_all = time.time()
@@ -172,7 +250,9 @@ class Scheduler:
                     prefill_s=stats["prefill_s"],
                     decode_s=stats["decode_s"]))
         self.last_stats = {"wall_s": time.time() - t_all,
-                           "tokens": int(sum(len(r.tokens) for r in results))}
+                           "tokens": int(sum(len(r.tokens) for r in results)),
+                           "statuses": dict(Counter(str(r.status)
+                                                    for r in results))}
         return results
 
     # ------------------------------------------------------------------
@@ -182,6 +262,17 @@ class Scheduler:
 
         Greedy-deterministic at ``temperature == 0``: each request's tokens
         are bit-identical to a solo run regardless of what shares the batch.
+
+        Every submitted request terminates with exactly one typed
+        :class:`Result` (the chaos suite audits this): admission failures
+        (:class:`~repro.serving.pagedpool.PoolExhausted`) retry at most
+        ``retry.max_attempts`` times with backoff before a terminal
+        ``REJECTED``; a NaN/Inf-poisoned prefill
+        (:class:`~repro.core.cache.NumericFault`) fails only that request
+        — the engine already rolled back its reservation, so co-batched
+        slots continue bit-identically; engine-step faults retry bounded,
+        then fail the affected slots; deadlines surface ``TIMEOUT`` with
+        whatever tokens existed at the cutoff.
         """
         eng = self.engine
         if eng.cfg.modality == "audio":
@@ -190,7 +281,7 @@ class Scheduler:
         eos = eng.ecfg.eos_id
         key = jax.random.PRNGKey(0)
 
-        results: list[Result] = []
+        results: list[Result] = self._drain_shed()
         # the view owns the live cache tree and answers admission for both
         # layouts; dense admission is slot-count-limited (can_admit always
         # True), paged admission is pool-bytes-limited
@@ -211,33 +302,107 @@ class Scheduler:
         steps = 0
         t_decode_total = 0.0
         t_all = time.time()
+        attempts: dict[int, int] = {}   # admission/fault retries per rid
+        degraded: set[int] = set()      # completed-but-impaired rids
+        not_before = 0.0                # admission backoff gate (sched clock)
+        dec_faults = 0                  # consecutive failed decode steps
 
-        def finish(s: int) -> None:
+        def expired(r: Request) -> bool:
+            return (r.deadline_s is not None
+                    and self._clock() - self._submit_t.get(r.rid, 0.0)
+                    > r.deadline_s)
+
+        def terminal(r: Request, status: RequestStatus, error: str,
+                     tokens=_EMPTY) -> None:
+            """Emit a non-completion result for a request not in a slot.
+            ``attempts`` in the result counts admission attempts consumed
+            (already tallied in the dict by the failure handlers)."""
+            results.append(Result(
+                rid=r.rid, tokens=np.asarray(tokens, np.int32),
+                prefill_s=0.0, decode_s=0.0, status=status,
+                attempts=attempts.get(r.rid, 0), error=error))
+
+        def reap_expired_queue() -> None:
+            """Queued requests past their deadline: empty TIMEOUT results."""
+            n = len(self.queue)
+            for _ in range(n):
+                r = self.queue.popleft()
+                if expired(r):
+                    terminal(r, RequestStatus.TIMEOUT,
+                             f"deadline {r.deadline_s}s elapsed while queued")
+                else:
+                    self.queue.append(r)
+
+        def finish(s: int, status: RequestStatus | None = None,
+                   error: str = "") -> None:
             r = reqs[s]
+            if status is None:
+                status = (RequestStatus.DEGRADED
+                          if attempts.get(r.rid, 0) or r.rid in degraded
+                          else RequestStatus.OK)
             results.append(Result(
                 rid=r.rid,
                 tokens=_truncate_eos(np.asarray(toks_buf[s], np.int32), eos),
                 prefill_s=float(prefill_s[s]),
-                decode_s=float(decode_s[s])))
+                decode_s=float(decode_s[s]),
+                status=status, attempts=attempts.get(r.rid, 0) + 1,
+                error=error))
             reqs[s] = None
             done[s] = True
             cur[s] = 0
 
+        def admit_failed(r: Request, exc: Exception,
+                         status: RequestStatus) -> bool:
+            """Bounded-retry bookkeeping for a failed admission.  Returns
+            True when the request was terminally resolved (do not requeue),
+            False when it went back to the queue head to retry later."""
+            nonlocal not_before
+            attempts[r.rid] = attempts.get(r.rid, 0) + 1
+            if attempts[r.rid] >= self.retry.max_attempts:
+                terminal(r, status,
+                         f"admission failed {attempts[r.rid]}x: {exc}")
+                return True
+            self.queue.appendleft(r)
+            not_before = self._clock() + self.retry.backoff(attempts[r.rid])
+            return False
+
         def splice(s: int) -> bool:
+            """Admit the queue head into idle slot ``s``.  True when the
+            slot's state may have changed (spliced, or the head resolved
+            terminally — the admission loop may try the next request);
+            False when the head was requeued for a later retry."""
             r = self.queue.popleft()
+            if expired(r):
+                terminal(r, RequestStatus.TIMEOUT,
+                         f"deadline {r.deadline_s}s elapsed while queued")
+                return True
             prompt = np.asarray(r.tokens, np.int32)[None]   # raw, unpadded
             t0 = time.time()
             try:
+                if self._faults is not None:
+                    self._faults.check_step("prefill")
                 logits = view.prefill_slot(
                     {"tokens": jnp.asarray(prompt, jnp.int32)}, s,
                     admit=self.prefix_admission == "all",
                     reserve_tokens=self._need_tokens(r))
-            except PoolExhausted:
+            except PoolExhausted as e:
                 # can_admit raced another consumer of the pool (e.g. trie
-                # admission of a concurrent splice): requeue, not crash —
-                # pages come back when a running slot finishes
-                self.queue.appendleft(r)
-                return False
+                # admission of a concurrent splice) or the fault injector
+                # forced exhaustion: bounded retry, then REJECTED — pages
+                # normally come back when a running slot finishes, but an
+                # unbounded requeue livelocks under sustained pressure
+                return admit_failed(r, e, RequestStatus.REJECTED)
+            except NumericFault as e:
+                # quarantine: the engine rolled its reservation back and
+                # never touched the shared tree; only THIS request fails
+                attempts[r.rid] = attempts.get(r.rid, 0) + 1
+                terminal(r, RequestStatus.FAILED, f"numeric quarantine: {e}")
+                return True
+            except InjectedFault as e:
+                # transient engine-step fault raised before any device work:
+                # bounded retry (it completes DEGRADED), then FAILED
+                degraded.add(r.rid)
+                return admit_failed(r, e, RequestStatus.FAILED)
             first = int(np.asarray(
                 sample(logits[:, -1], key, eng.ecfg.temperature, eng.ecfg.top_k))[0])
             prefill_s[s] = time.time() - t0
@@ -253,10 +418,18 @@ class Scheduler:
                 finish(s)
             return True
 
+        def head_ready() -> bool:
+            """May the queue head attempt admission right now?  Gated on
+            the retry backoff window and the view's capacity answer."""
+            return (self._clock() >= not_before
+                    and view.can_admit(self._need_tokens(self.queue[0])))
+
         while self.queue or not bool(done.all()):
+            if self._faults is not None:
+                self._faults.tick(eng)
+            reap_expired_queue()
             for s in range(B):
-                while (done[s] and self.queue
-                       and view.can_admit(self._need_tokens(self.queue[0]))):
+                while done[s] and self.queue and head_ready():
                     if not splice(s):
                         break
                 if done[s] and not fresh[s]:
@@ -270,17 +443,48 @@ class Scheduler:
             if bool(done.all()):
                 if not self.queue:
                     break
+                now = self._clock()
+                if now < not_before:
+                    # idle engine inside a backoff window: sleep it off
+                    self._sleep(not_before - now)
+                    continue
                 # every slot is idle yet the head request was not admitted:
                 # the pool's free pages are pinned by the prefix trie.
                 # Reclaim (LRU-evict trie entries back into allocatable
-                # pages) and retry; submit()'s bound guarantees the request
-                # fits an empty pool, so a second failure is a real bug.
-                need = self._need_tokens(self.queue[0])
+                # pages) and retry; when reclaim frees nothing (empty or
+                # fully-pinned trie), bounded attempts surface a terminal
+                # REJECTED instead of spinning forever.
+                r = self.queue[0]
+                need = self._need_tokens(r)
                 if view.reclaim(need) or view.can_admit(need):
                     continue
-                raise RuntimeError(
-                    f"request {self.queue[0].rid}: inadmissible on an idle "
-                    "engine even after reclaiming the prefix cache")
+                self.queue.popleft()
+                if not admit_failed(
+                        r, PoolExhausted(
+                            f"need {need} tokens, idle engine, reclaim freed "
+                            "nothing"),
+                        RequestStatus.REJECTED):
+                    # requeued for another attempt after its backoff
+                    self._sleep(max(not_before - self._clock(), 0.0))
+                continue
+            if self._faults is not None:
+                try:
+                    self._faults.check_step("decode")
+                except InjectedFault as e:
+                    # fault raised BEFORE the jitted step dispatches, so the
+                    # donated cache tree is untouched — retry is safe
+                    dec_faults += 1
+                    active = list(np.nonzero(~done)[0])
+                    if dec_faults >= self.retry.max_attempts:
+                        for s in active:
+                            finish(s, status=RequestStatus.FAILED,
+                                   error=f"decode failed {dec_faults}x: {e}")
+                        dec_faults = 0
+                    else:
+                        degraded.update(reqs[s].rid for s in active)
+                        self._sleep(self.retry.backoff(dec_faults))
+                    continue
+                dec_faults = 0
             t0 = time.time()
             tb = {"tokens": jnp.asarray(cur[:, None])}
             logits = view.decode(tb, pos)
@@ -298,6 +502,10 @@ class Scheduler:
                 cur[s] = tok
                 if (eos >= 0 and tok == eos) or len(toks_buf[s]) >= budget[s]:
                     finish(s)
+                elif expired(reqs[s]):
+                    finish(s, status=RequestStatus.TIMEOUT,
+                           error=f"deadline {reqs[s].deadline_s}s elapsed "
+                                 "mid-decode")
 
         self.last_stats = {
             "wall_s": time.time() - t_all,
@@ -306,6 +514,7 @@ class Scheduler:
             "tokens": int(sum(len(r.tokens) for r in results)),
             "attend_path": eng.attend_path,
             "layout": str(eng.ecfg.layout),
+            "statuses": dict(Counter(str(r.status) for r in results)),
         }
         if eng.pool is not None:
             self.last_stats["pool"] = {

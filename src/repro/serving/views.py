@@ -60,6 +60,11 @@ class CacheView(Protocol):
         ``can_admit`` now holds."""
         ...
 
+    def audit(self) -> dict:
+        """Backing-store invariant report ``{"ok", "issues", ...}``; never
+        raises (the chaos suite asserts on it after fault schedules)."""
+        ...
+
 
 class _ViewBase:
     def __init__(self, engine, caches):
@@ -91,6 +96,9 @@ class DenseCacheView(_ViewBase):
     def reclaim(self, n_tokens: int) -> bool:
         return False           # nothing to reclaim; admission never fails
 
+    def audit(self) -> dict:
+        return self.engine.audit()
+
 
 class PagedCacheView(_ViewBase):
     """Pooled page layout: admission is pool-bytes-limited.
@@ -112,3 +120,6 @@ class PagedCacheView(_ViewBase):
         if deficit > 0:
             self.engine.reclaim_pages(deficit)
         return self.can_admit(n_tokens)
+
+    def audit(self) -> dict:
+        return self.engine.audit()

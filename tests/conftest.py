@@ -24,6 +24,10 @@ def pytest_configure(config):
         "markers",
         "kernel: exercises Pallas kernel code (interpret mode on CPU); the "
         "CI tests-kernels lane runs `pytest -m kernel`")
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection / resilience test (seeded FaultInjector "
+        "schedules); the CI tests-chaos lane runs `pytest -m chaos`")
 
 
 @pytest.fixture(scope="session")
