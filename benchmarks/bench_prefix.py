@@ -207,16 +207,62 @@ def run(smoke: bool = False):
     return speedup, hit_rate
 
 
+def obs_overhead(iters: int = 2):
+    """Telemetry cost on the prefill-bound warm path (``--obs``).
+
+    The smoke workload re-run on a prefix-cached engine with metrics +
+    tracing enabled but fidelity probes OFF (``fidelity_every_n=0``) — a
+    probe's fp16 shadow prefill would swamp a prefill-only timing, and its
+    cost is governed by its own budget throttle, not this gate.  Emits
+    ``obs/prefix_overhead_frac`` = fractional warm prefill tok/s lost,
+    gated by the CI ceiling; bit-parity vs the cold run is asserted so
+    telemetry provably never touches the numerics.
+    """
+    from repro.obs import ObsConfig
+    model = build_model(BENCH_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    base = EngineConfig(batch=1, capacity=PROMPT_LEN + POLICY.buffer_size,
+                        policy=POLICY, prefill_mode="streaming",
+                        prefix_cache=True)
+    eng_plain = Engine(model, params, base)
+    eng_obs = Engine(model, params,
+                     dataclasses.replace(base,
+                                         obs=ObsConfig(fidelity_every_n=0)))
+    prompts = _workload(SHARED_CHUNKS)
+    _, logits_cold = _measure(Engine(model, params, dataclasses.replace(
+        base, prefix_cache=False)), prompts, 1)
+
+    t_plain, _ = _measure(eng_plain, prompts, iters,
+                          check_against=logits_cold)
+    t_obs, _ = _measure(eng_obs, prompts, iters, check_against=logits_cold)
+    overhead = max(0.0, 1.0 - t_plain / t_obs)
+    assert eng_obs.obs.registry.get(
+        "serving_prefill_bucket_tokens").series(), \
+        "telemetry engine emitted no prefill metrics"
+    emit("obs/prefix_overhead_frac", 0.0,
+         f"{overhead:.3f} fractional warm prefill tok/s lost to metrics+"
+         f"tracing (fidelity off; warm logits still bit-equal cold)",
+         value=overhead)
+    assert overhead < 0.25, \
+        f"prefill telemetry overhead {overhead:.1%} is pathological"
+    return overhead
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fewer timing iterations (CI)")
+    ap.add_argument("--obs", action="store_true",
+                    help="also measure telemetry overhead on the warm "
+                         "prefill path (metrics+tracing, fidelity off)")
     ap.add_argument("--json", default=None,
                     help="also write the emitted rows to this JSON file")
     args = ap.parse_args()
     run(smoke=args.smoke)
+    if args.obs:
+        obs_overhead()
     if args.json:
         from benchmarks.common import write_json
         write_json(args.json)

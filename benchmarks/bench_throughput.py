@@ -267,6 +267,105 @@ def chaos_smoke(key, n_reqs: int = 10, batch: int = 4):
     return ok_rate
 
 
+def obs_smoke(key, n_reqs: int = 8, batch: int = 4):
+    """Telemetry overhead + coverage smoke (``--obs``).
+
+    The same mixed-length continuous workload served by two engines that
+    differ ONLY in ``EngineConfig.obs`` — off vs full telemetry (metrics +
+    tracing + fidelity probes at ``every_n=1``).  Emits
+    ``obs/overhead_frac`` = fractional decode tok/s lost with telemetry
+    on (median of 3 interleaved drives, clamped at 0); the CI regression
+    gate holds it at the committed ceiling.  Also asserts, in-bench, the
+    ISSUE 10 acceptance bundle:
+
+    * traces cover 100% of submitted rids, exactly one per rid, with
+      statuses matching the scheduler's audit;
+    * fidelity probes report per-layer error for >= 1 sampled chunk on
+      every GEAR layer;
+    * the Prometheus exposition and JSON snapshot both round-trip.
+    """
+    import json as _json
+
+    from repro.obs import ObsConfig
+    from repro.obs.registry import parse_prometheus
+    from repro.serving.scheduler import Scheduler
+    cfg = smoke_config("llama2-7b")
+    m = build_model(cfg)
+    params = m.init(key)
+    pol = dataclasses.replace(named_policy("gear_kcvt4"),
+                              buffer_size=16, rank=2, rank_decode=2)
+    # prompts up to 2 chunks long so fidelity probes see closed chunks
+    max_prompt = 32
+    base = EngineConfig(batch=batch, capacity=96, policy=pol, eos_id=-1)
+    eng_off = Engine(m, params, base)
+    eng_on = Engine(m, params,
+                    dataclasses.replace(base,
+                                        obs=ObsConfig(fidelity_every_n=1)))
+
+    def drive(eng):
+        if eng.obs is not None:
+            eng.obs.tracer.reset()   # one trace per rid per measured drive
+        sched = Scheduler(eng)
+        reqs = _mixed_requests(n_reqs, max_prompt, cfg.vocab_size)
+        for r in reqs:
+            sched.submit(r)
+        results = sched.run_continuous()
+        st = sched.last_stats
+        return st["tokens"] / max(st["decode_s"], 1e-9), sched, results, reqs
+
+    drive(eng_off)                   # compile warmup (same jit programs,
+    drive(eng_on)                    # but each engine owns its own cache)
+    offs, ons = [], []
+    for _ in range(3):               # interleaved: drift hits both equally
+        offs.append(drive(eng_off)[0])
+        tok_on, sched, results, reqs = drive(eng_on)
+        ons.append(tok_on)
+    off_med = sorted(offs)[1]
+    on_med = sorted(ons)[1]
+    overhead = max(0.0, 1.0 - on_med / off_med)
+
+    # --- acceptance: trace coverage matches the scheduler's own audit
+    o = eng_on.obs
+    cov = o.tracer.coverage([r.rid for r in reqs])
+    assert cov["complete"], cov
+    assert cov["statuses"] == {r.rid: str(r.status) for r in results}, cov
+    rep = sched.audit(results)
+    assert rep["ok"], rep["issues"]
+
+    # --- acceptance: >= 1 sampled chunk with per-layer error on every
+    # GEAR layer (global index r * len(pattern) + i, see FidelityProbe)
+    assert o.fidelity is not None and o.fidelity.reports, \
+        "no fidelity reports despite every_n=1 and multi-chunk prompts"
+    pat = len(cfg.layer_pattern)
+    want_layers = {r * pat + i for r in range(cfg.pattern_repeats)
+                   for i in o.fidelity._gear_pos}
+    layers_seen = {lr["layer"] for rp in o.fidelity.reports
+                   for lr in rp["layers"]}
+    assert layers_seen == want_layers, (layers_seen, want_layers)
+    assert all("k_rel_err" in lr and "v_rel_err" in lr
+               for rp in o.fidelity.reports for lr in rp["layers"])
+
+    # --- acceptance: exports round-trip
+    parsed = parse_prometheus(o.to_prometheus())
+    subm = o.registry.get("serving_requests_submitted_total").value()
+    assert parsed[("serving_requests_submitted_total", ())] == subm > 0
+    snap = _json.loads(o.to_json())
+    assert snap["schema"] == o.snapshot()["schema"]
+    assert {mt["name"] for mt in snap["metrics"]} == set(o.registry.names())
+    chrome = o.tracer.to_chrome()
+    assert len(chrome["traceEvents"]) > 0
+
+    emit("obs/decode_tok_per_s_off", 0.0, f"{off_med:.1f} tok/s telemetry off")
+    emit("obs/decode_tok_per_s_on", 0.0,
+         f"{on_med:.1f} tok/s metrics+traces+fidelity(every_n=1)")
+    emit("obs/overhead_frac", 0.0,
+         f"{overhead:.3f} fractional decode tok/s lost (median of 3, "
+         f"gate <= 0.05)", value=overhead)
+    assert overhead < 0.25, \
+        f"telemetry overhead {overhead:.1%} is pathological"
+    return overhead
+
+
 def run(key=None, smoke: bool = False, fused_only: bool = False):
     key = key if key is not None else jax.random.PRNGKey(0)
     if fused_only:
@@ -294,11 +393,17 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="resilience smoke: fault-free ok-rate + degraded "
                          "throughput under a seeded fault schedule")
+    ap.add_argument("--obs", action="store_true",
+                    help="telemetry smoke: decode tok/s overhead with full "
+                         "observability on, plus coverage/fidelity/round-"
+                         "trip acceptance asserts")
     ap.add_argument("--json", default=None,
                     help="also write the emitted rows to this JSON file")
     args = ap.parse_args()
     if args.chaos:
         chaos_smoke(jax.random.PRNGKey(0))
+    elif args.obs:
+        obs_smoke(jax.random.PRNGKey(0))
     else:
         run(smoke=args.smoke, fused_only=args.fused)
     if args.json:

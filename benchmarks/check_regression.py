@@ -25,6 +25,10 @@ in the committed baseline against the freshly-measured rows and fails on:
 * ``*ok_rate*`` — ANY drop (bench_throughput ``--chaos``: the fault-FREE
   path with the resilience layer armed must keep every request ``OK`` —
   a drop means retries/valve/quarantine fired on healthy traffic);
+* ``*overhead_frac*`` — growth ABOVE the committed ceiling (bench_throughput
+  ``--obs`` / bench_prefix ``--obs``: fractional tok/s lost to telemetry;
+  the baseline is a ceiling, not a floor — lower is better, and exceeding
+  it means the observability layer started costing real throughput);
 * ``*concurrent_over*`` — bench_paged's fixed-byte packing ratio: pure page
   arithmetic from the engine's own byte accounting, so ANY drop fails, plus
   an absolute >= 3x floor (the paged layout's headline capacity claim);
@@ -76,7 +80,7 @@ def load_rows(bench_dir: str) -> dict[str, float]:
 def governed(name: str) -> bool:
     return ("tok_per_s" in name or "nbytes" in name or "peak_bytes" in name
             or "_over_" in name or "hit_rate" in name or "toks_saved" in name
-            or "ok_rate" in name)
+            or "ok_rate" in name or "overhead_frac" in name)
 
 
 def check(baseline: dict[str, float], rows: dict[str, float],
@@ -88,6 +92,15 @@ def check(baseline: dict[str, float], rows: dict[str, float],
             failures.append(f"{name}: missing from bench output (baseline {ref:g})")
         elif "nbytes" in name and new > ref:
             failures.append(f"{name}: {new:g} bytes > baseline {ref:g} (any growth fails)")
+        elif "overhead_frac" in name:
+            # telemetry cost ceiling: the committed value is the MAXIMUM
+            # tolerable fraction of tok/s lost with observability enabled
+            if new > ref + 1e-9:
+                failures.append(
+                    f"{name}: {new:g} > ceiling {ref:g} (telemetry overhead "
+                    "budget exceeded)")
+            else:
+                print(f"ok   {name}: {new:g} (ceiling {ref:g})")
         elif (("hit_rate" in name or "toks_saved" in name
                or "ok_rate" in name) and new < ref - 1e-9):
             failures.append(

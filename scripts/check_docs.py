@@ -1,11 +1,17 @@
 #!/usr/bin/env python
-"""Docs-consistency gate: docs/serving.md must document every EngineConfig
-knob.
+"""Docs-consistency gate.
 
-Parses the ``EngineConfig`` dataclass out of ``src/repro/serving/engine.py``
-with ``ast`` (no imports — the lint lane has no jax) and asserts each field
-name appears as an inline-code knob (`` `name` ``) in docs/serving.md, so
-adding a knob without documenting it fails CI.  Run from the repo root:
+Two checks, both ast-based (no imports — the lint lane has no jax):
+
+1. docs/serving.md must document every ``EngineConfig`` knob: the
+   dataclass is parsed out of ``src/repro/serving/engine.py`` and each
+   field name must appear as an inline-code knob (`` `name` ``).
+2. docs/observability.md must document every metric in the telemetry
+   catalog: every ``MetricSpec(name=...)`` literal in
+   ``src/repro/obs/catalog.py`` must appear as inline code, so adding a
+   metric without documenting it fails CI.
+
+Run from the repo root:
 
     python scripts/check_docs.py
 """
@@ -19,7 +25,11 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 ENGINE = ROOT / "src" / "repro" / "serving" / "engine.py"
-DOC = ROOT / "docs" / "serving.md"
+CATALOG = ROOT / "src" / "repro" / "obs" / "catalog.py"
+SERVING_DOC = ROOT / "docs" / "serving.md"
+OBS_DOC = ROOT / "docs" / "observability.md"
+
+_CODE = re.compile(r"`([A-Za-z_][A-Za-z0-9_]*)`")
 
 
 def engine_config_fields() -> list[str]:
@@ -32,24 +42,63 @@ def engine_config_fields() -> list[str]:
     raise SystemExit(f"EngineConfig dataclass not found in {ENGINE}")
 
 
+def catalog_metric_names() -> list[str]:
+    """Every metric name declared in the obs catalog's METRICS tuple.
+
+    A metric is a ``MetricSpec(...)`` call whose first positional (or
+    ``name=``) argument is a string literal; parsing the literals keeps
+    this lint-lane safe (catalog.py imports nothing heavier than stdlib,
+    but the gate should not depend on that staying true).
+    """
+    names: list[str] = []
+    for node in ast.walk(ast.parse(CATALOG.read_text())):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "MetricSpec"):
+            continue
+        arg: ast.expr | None = node.args[0] if node.args else None
+        if arg is None:
+            for kw in node.keywords:
+                if kw.arg == "name":
+                    arg = kw.value
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            names.append(arg.value)
+    if not names:
+        raise SystemExit(f"no MetricSpec names found in {CATALOG}")
+    return names
+
+
+def documented_names(doc_path: pathlib.Path) -> set[str]:
+    if not doc_path.exists() or not doc_path.read_text():
+        raise SystemExit(f"error: {doc_path} is missing or empty")
+    return set(_CODE.findall(doc_path.read_text()))
+
+
 def main() -> int:
+    rc = 0
+
     fields = engine_config_fields()
-    if not fields:
-        print(f"error: EngineConfig in {ENGINE} has no annotated fields")
-        return 1
-    doc = DOC.read_text() if DOC.exists() else ""
-    if not doc:
-        print(f"error: {DOC} is missing or empty")
-        return 1
-    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", doc))
-    missing = [f for f in fields if f not in documented]
+    missing = [f for f in fields if f not in documented_names(SERVING_DOC)]
     if missing:
         print(f"error: docs/serving.md does not document these EngineConfig "
               f"knobs: {', '.join(missing)}")
         print("add a row to the knob reference in docs/serving.md §1")
-        return 1
-    print(f"docs/serving.md documents all {len(fields)} EngineConfig knobs")
-    return 0
+        rc = 1
+    else:
+        print(f"docs/serving.md documents all {len(fields)} EngineConfig knobs")
+
+    metrics = catalog_metric_names()
+    missing = [m for m in metrics if m not in documented_names(OBS_DOC)]
+    if missing:
+        print(f"error: docs/observability.md does not document these catalog "
+              f"metrics: {', '.join(missing)}")
+        print("add a row to the metric catalog tables in docs/observability.md")
+        rc = 1
+    else:
+        print(f"docs/observability.md documents all {len(metrics)} "
+              f"catalog metrics")
+
+    return rc
 
 
 if __name__ == "__main__":

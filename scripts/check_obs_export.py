@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""CI schema check for the serving telemetry exports (stdlib-only).
+
+Validates the two artifacts ``repro.launch.serve --metrics-json /
+--trace-out`` writes (and that ``Observability.write_metrics_json`` /
+``write_trace`` produce):
+
+* a **metrics snapshot** — schema tag ``gear-repro/metrics/v1``; every
+  metric carries ``name`` / ``type`` / ``help`` / ``labels`` / ``series``;
+  counter and gauge series are ``{labels, value}``; histogram series carry
+  monotone non-decreasing cumulative ``buckets`` ending at ``+Inf``, with
+  the ``+Inf`` count equal to ``count``; every series' label keys equal the
+  metric's declared label names;
+* a **Chrome trace** — schema tag ``gear-repro/trace/v1``; every event is
+  a complete-phase (``ph: X``, with ``dur >= 0``) or instant (``ph: i``)
+  record with ``name`` / ``ts`` / ``tid``; every ``tid`` (one per request)
+  has exactly one ``request`` event whose args carry a terminal status.
+
+Run from CI after the serve smoke::
+
+    python -m repro.launch.serve --smoke --obs \
+        --metrics-json out/metrics.json --trace-out out/trace.json
+    python scripts/check_obs_export.py out/metrics.json out/trace.json
+
+Exit status: 0 valid, 1 with every violation listed on stderr.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+METRICS_SCHEMA = "gear-repro/metrics/v1"
+TRACE_SCHEMA = "gear-repro/trace/v1"
+
+
+def check_metrics(doc) -> list[str]:
+    errs = []
+    if doc.get("schema") != METRICS_SCHEMA:
+        errs.append(f"metrics: schema {doc.get('schema')!r} != {METRICS_SCHEMA!r}")
+    if not isinstance(doc.get("time"), (int, float)):
+        errs.append("metrics: missing numeric 'time'")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, list) or not metrics:
+        return errs + ["metrics: empty or missing 'metrics' list"]
+    seen = set()
+    for m in metrics:
+        name = m.get("name", "<unnamed>")
+        if name in seen:
+            errs.append(f"metrics: duplicate metric {name!r}")
+        seen.add(name)
+        kind = m.get("type")
+        if kind not in ("counter", "gauge", "histogram"):
+            errs.append(f"{name}: bad type {kind!r}")
+            continue
+        if not m.get("help"):
+            errs.append(f"{name}: missing help text")
+        labels = m.get("labels")
+        if not isinstance(labels, list):
+            errs.append(f"{name}: missing label-name list")
+            continue
+        for s in m.get("series", []):
+            if set(s.get("labels", {})) != set(labels):
+                errs.append(f"{name}: series labels {sorted(s.get('labels', {}))}"
+                            f" != declared {sorted(labels)}")
+            if kind == "histogram":
+                errs.extend(_check_hist_series(name, s))
+            elif not isinstance(s.get("value"), (int, float)):
+                errs.append(f"{name}: series without numeric value")
+    return errs
+
+
+def _check_hist_series(name: str, s: dict) -> list[str]:
+    errs = []
+    buckets = s.get("buckets")
+    if not isinstance(buckets, list) or not buckets:
+        return [f"{name}: histogram series without buckets"]
+    if buckets[-1].get("le") != "+Inf":
+        errs.append(f"{name}: last bucket le={buckets[-1].get('le')!r}, "
+                    "want '+Inf'")
+    counts = [b.get("count") for b in buckets]
+    if any(not isinstance(c, (int, float)) or c < 0 for c in counts):
+        errs.append(f"{name}: non-numeric/negative bucket count")
+    elif any(a > b for a, b in zip(counts, counts[1:])):
+        errs.append(f"{name}: cumulative bucket counts decrease: {counts}")
+    if isinstance(s.get("count"), (int, float)) and counts:
+        if counts[-1] != s["count"]:
+            errs.append(f"{name}: +Inf bucket {counts[-1]} != count {s['count']}")
+    else:
+        errs.append(f"{name}: histogram series without numeric count")
+    if not isinstance(s.get("sum"), (int, float)):
+        errs.append(f"{name}: histogram series without numeric sum")
+    return errs
+
+
+def check_trace(doc) -> list[str]:
+    errs = []
+    if doc.get("schema") != TRACE_SCHEMA:
+        errs.append(f"trace: schema {doc.get('schema')!r} != {TRACE_SCHEMA!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return errs + ["trace: empty or missing 'traceEvents'"]
+    requests: dict = {}
+    for e in events:
+        where = f"trace event {e.get('name', '<unnamed>')!r}"
+        if not e.get("name"):
+            errs.append("trace: event without a name")
+        if e.get("ph") not in ("X", "i"):
+            errs.append(f"{where}: ph {e.get('ph')!r} not in ('X', 'i')")
+        if not isinstance(e.get("ts"), (int, float)):
+            errs.append(f"{where}: missing numeric ts")
+        if "tid" not in e:
+            errs.append(f"{where}: missing tid")
+        if e.get("ph") == "X" and not (isinstance(e.get("dur"), (int, float))
+                                       and e["dur"] >= 0):
+            errs.append(f"{where}: complete event without dur >= 0")
+        if e.get("name") == "request":
+            requests.setdefault(e.get("tid"), []).append(e)
+    if not requests:
+        errs.append("trace: no per-request 'request' events")
+    for tid, evs in sorted(requests.items()):
+        if len(evs) != 1:
+            errs.append(f"trace: tid {tid}: {len(evs)} request events (want 1)")
+        if not evs[0].get("args", {}).get("status"):
+            errs.append(f"trace: tid {tid}: request event without a status")
+    return errs
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 1
+    metrics_path, trace_path = argv
+    errs = []
+    for path, checker, tag in ((metrics_path, check_metrics, "metrics"),
+                               (trace_path, check_trace, "trace")):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errs.append(f"{tag}: cannot load {path!r}: {e}")
+            continue
+        errs.extend(checker(doc))
+    for e in errs:
+        print(f"FAIL {e}", file=sys.stderr)
+    if errs:
+        print(f"check_obs_export: {len(errs)} violation(s)", file=sys.stderr)
+        return 1
+    print(f"check_obs_export: {metrics_path} and {trace_path} schema-valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -4,6 +4,11 @@ All sizes are *analytic* — derived from the storage layout, not measured —
 which is exactly how the paper reports "KV size % of FP16" (Tables 1/2/9 and
 Figure 6).  ``kv_size_fraction`` covers every method/backbone combination on
 an ``n`` tokens × ``d`` channels cache (per layer; layers scale linearly).
+
+Also home to the measured-error primitives (:func:`masked_rel_frobenius`,
+:func:`masked_share`) shared by the offline parity tests and the online
+fidelity probes (:mod:`repro.obs.fidelity`): masked Frobenius reductions
+so a single jitted program covers any valid-token region.
 """
 
 from __future__ import annotations
@@ -11,10 +16,37 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import jax.numpy as jnp
+
 from repro.core.outlier import outlier_count
 from repro.core.policy import CompressionPolicy
 
-__all__ = ["SizeBreakdown", "kv_size_breakdown", "kv_size_fraction"]
+__all__ = ["SizeBreakdown", "kv_size_breakdown", "kv_size_fraction",
+           "masked_rel_frobenius", "masked_share"]
+
+_EPS = 1e-12
+
+
+def masked_rel_frobenius(approx, ref, mask):
+    """``||approx − ref||_F / ||ref||_F`` over ``mask`` (broadcastable
+    boolean); jittable, any shapes."""
+    m = jnp.asarray(mask, jnp.float32)
+    a = jnp.asarray(approx, jnp.float32)
+    r = jnp.asarray(ref, jnp.float32)
+    num = jnp.sqrt(jnp.sum(((a - r) ** 2) * m))
+    den = jnp.sqrt(jnp.sum((r ** 2) * m))
+    return num / jnp.maximum(den, _EPS)
+
+
+def masked_share(part, whole, mask):
+    """``||part||_F / ||whole||_F`` over ``mask`` — the share a component
+    (low-rank residual, sparse outliers) contributes to a reconstruction."""
+    m = jnp.asarray(mask, jnp.float32)
+    p = jnp.asarray(part, jnp.float32)
+    w = jnp.asarray(whole, jnp.float32)
+    num = jnp.sqrt(jnp.sum((p ** 2) * m))
+    den = jnp.sqrt(jnp.sum((w ** 2) * m))
+    return num / jnp.maximum(den, _EPS)
 
 FP16_BYTES = 2
 IDX_BYTES = 4

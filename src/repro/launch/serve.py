@@ -24,8 +24,8 @@ from repro.configs import get_config, smoke_config
 from repro.core.policy import named_policy
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import build_model
-from repro.serving import (CacheLayout, Engine, EngineConfig, Request,
-                           Scheduler)
+from repro.serving import (CacheLayout, Engine, EngineConfig, ObsConfig,
+                           Request, Scheduler)
 
 
 def main():
@@ -46,7 +46,18 @@ def main():
                          "equivalent batch*n_chunks pages)")
     ap.add_argument("--requests", type=int, default=0,
                     help="continuous: queued requests (default 2*batch)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable serving telemetry (metrics + traces)")
+    ap.add_argument("--fidelity-every", type=int, default=0,
+                    help="obs: probe every Nth closed chunk (0 = off)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics registry snapshot here (JSON; "
+                         "implies --obs)")
+    ap.add_argument("--trace-out", default="",
+                    help="write Chrome trace_event JSON here (implies --obs)")
     args = ap.parse_args()
+    if args.metrics_json or args.trace_out or args.fidelity_every:
+        args.obs = True
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -57,6 +68,8 @@ def main():
     layout = CacheLayout(args.layout)
     if layout is CacheLayout.PAGED and args.mode == "wave":
         args.mode = "continuous"   # paged serves through continuous batching
+    if args.obs and args.mode == "wave":
+        args.mode = "continuous"   # traces span the request lifecycle
     mesh = None
     if args.mesh:
         dims = [int(v) for v in args.mesh.split("x")]
@@ -64,10 +77,12 @@ def main():
 
     params = model.init(jax.random.PRNGKey(0))
     cap = args.prompt + args.gen + (cfg.num_prefix_tokens if cfg.modality == "vlm" else 0)
+    obs_cfg = (ObsConfig(fidelity_every_n=max(args.fidelity_every, 0))
+               if args.obs else None)
     eng = Engine(model, params,
                  EngineConfig(batch=args.batch, capacity=cap, policy=pol,
                               temperature=args.temperature, layout=layout,
-                              pool_bytes=args.pool_bytes),
+                              pool_bytes=args.pool_bytes, obs=obs_cfg),
                  mesh=mesh)
     key = jax.random.PRNGKey(1)
 
@@ -94,6 +109,19 @@ def main():
             line += (f"; pool {p['used_pages']}/{p['used_pages'] + p['free_pages']}"
                      f" pages used, {p['shared_pages']} shared")
         print(line)
+        if eng.obs is not None:
+            cov = eng.obs.tracer.coverage([r.rid for r in results])
+            line = (f"obs: traces {len(cov['statuses'])}/{len(results)} rids"
+                    f" complete={cov['complete']}")
+            if eng.obs.fidelity is not None:
+                line += f", fidelity probes {len(eng.obs.fidelity.reports)}"
+            print(line)
+            if args.metrics_json:
+                eng.obs.write_metrics_json(args.metrics_json)
+                print(f"obs: metrics snapshot -> {args.metrics_json}")
+            if args.trace_out:
+                eng.obs.write_trace(args.trace_out)
+                print(f"obs: chrome trace -> {args.trace_out}")
         return
 
     if cfg.modality == "audio":

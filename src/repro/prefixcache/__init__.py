@@ -29,9 +29,42 @@ from repro.prefixcache.store import (ChunkStore, chunk_keys, payload_nbytes,
                                      extract_tree_chunks, splice_tree_chunks)
 from repro.prefixcache.trie import RadixTrie, TrieNode, TrieStats
 
-__all__ = ["PrefixCache", "PrefixMatch", "RadixTrie", "TrieNode", "TrieStats",
-           "ChunkStore", "chunk_keys", "payload_nbytes",
-           "extract_tree_chunks", "splice_tree_chunks"]
+__all__ = ["PrefixCache", "PrefixMatch", "PrefixSnapshot", "RadixTrie",
+           "TrieNode", "TrieStats", "ChunkStore", "chunk_keys",
+           "payload_nbytes", "extract_tree_chunks", "splice_tree_chunks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSnapshot:
+    """Typed point-in-time view of a :class:`PrefixCache` (trie stats +
+    store health) — what ``Scheduler.last_stats`` diffs for its per-run
+    prefix counters.  Indexing delegates to attributes for dict-style
+    consumers."""
+
+    prefix_hit_rate: float
+    prefill_toks_saved: int
+    lookups: int
+    hits: int
+    misses: int
+    hit_chunks: int
+    lookup_chunks: int
+    inserts: int
+    evictions: int
+    expiries: int
+    version_evictions: int
+    validate_failures: int
+    nodes: int
+    bytes: int
+    budget_bytes: int
+
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -171,6 +204,20 @@ class PrefixCache:
         return self.trie.audit()
 
     # ------------------------------------------------------------------
+    def snapshot(self) -> PrefixSnapshot:
+        """Typed snapshot (see :class:`PrefixSnapshot`)."""
+        st = self.trie.stats
+        return PrefixSnapshot(
+            prefix_hit_rate=st.prefix_hit_rate,
+            prefill_toks_saved=self.toks_saved,
+            lookups=st.lookups, hits=st.hits, misses=st.misses,
+            hit_chunks=st.hit_chunks, lookup_chunks=st.lookup_chunks,
+            inserts=st.inserts, evictions=st.evictions,
+            expiries=st.expiries, version_evictions=st.version_evictions,
+            validate_failures=getattr(self.store, "validate_failures", 0),
+            nodes=self.trie.n_nodes, bytes=self.trie.total_bytes,
+            budget_bytes=self.trie.budget_bytes)
+
     @property
     def stats(self) -> dict:
         st = self.trie.stats

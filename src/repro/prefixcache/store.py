@@ -60,6 +60,7 @@ class ChunkStore:
         self._entries: dict[int, tuple[Any, int]] = {}
         self._next_handle = 0
         self.total_bytes = 0
+        self.validate_failures = 0  # NumericFault rejections at put()
 
     @staticmethod
     def nbytes_of(payload) -> int:
@@ -70,6 +71,7 @@ class ChunkStore:
 
     def put(self, payload) -> int:
         if self.validate and not bool(cache_lib.tree_finite(payload)):
+            self.validate_failures += 1
             raise cache_lib.NumericFault(
                 "chunk payload holds NaN/Inf; refusing to cache it")
         handle = self._next_handle

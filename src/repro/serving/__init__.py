@@ -18,17 +18,23 @@ from here rather than from the submodules:
   :class:`RetryPolicy` / :class:`AdmissionValve` lifecycle primitives,
   :class:`NumericFault` quarantine, and the chaos-test harness
   (:class:`FaultInjector`, :class:`FaultEvent`, :class:`FakeClock`,
-  :class:`InjectedFault`).
+  :class:`InjectedFault`);
+* the observability layer (docs/observability.md): :class:`ObsConfig` /
+  :class:`Observability` (``EngineConfig(obs=...)``), plus the typed
+  :class:`PoolSnapshot` / :class:`PrefixSnapshot` stats views that
+  ``Scheduler.last_stats`` carries.
 """
 
 from repro.core.cache import NumericFault
+from repro.obs import Observability, ObsConfig
+from repro.prefixcache import PrefixSnapshot
 from repro.serving.engine import (AttendPath, CacheLayout, Engine,
                                   EngineConfig, PrefillMode,
                                   prefix_cache_unsupported_reason)
 from repro.serving.faults import (FakeClock, FaultEvent, FaultInjector,
                                   InjectedFault)
 from repro.serving.pagedpool import (PagePool, PagePoolStore, PoolExhausted,
-                                     pages_needed)
+                                     PoolSnapshot, pages_needed)
 from repro.serving.resilience import AdmissionValve, RequestStatus, RetryPolicy
 from repro.serving.sampling import sample
 from repro.serving.scheduler import Request, Result, Scheduler
@@ -42,5 +48,6 @@ __all__ = [
     "PagePool", "PagePoolStore", "PoolExhausted", "pages_needed",
     "RequestStatus", "RetryPolicy", "AdmissionValve", "NumericFault",
     "FaultInjector", "FaultEvent", "FakeClock", "InjectedFault",
+    "ObsConfig", "Observability", "PoolSnapshot", "PrefixSnapshot",
     "sample",
 ]

@@ -27,6 +27,7 @@ Two cache layouts (:class:`CacheLayout`):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import enum
 import time
@@ -37,12 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as cache_lib
-from repro.core.policy import CompressionPolicy
+from repro.core.policy import FP16, CompressionPolicy
 from repro.dist import sharding as shd
 from repro.kernels import ops as kernel_ops
 from repro.models import attention as attn_lib
 from repro.models.model import Model
 from repro.models.transformer import cache_cfg_for
+from repro.obs import Observability, ObsConfig
+from repro.obs.fidelity import FidelityProbe
+from repro.obs.tracing import profiler_span
 from repro.prefixcache import PrefixCache
 from repro.prefixcache import store as pc_store
 from repro.serving.pagedpool import PagePool, PagePoolStore, pages_needed
@@ -150,8 +154,24 @@ class EngineConfig:
     # worst case, useful for parity testing rather than memory savings.
     pool_pages: int = 0
     pool_bytes: int = 0
+    # Observability (:class:`repro.obs.ObsConfig`): metrics registry,
+    # per-request tracing, and online compression-fidelity probes.  None
+    # (default) builds no telemetry state and adds zero work to the hot
+    # path; ``obs=True`` coerces to ``ObsConfig()`` defaults.  See
+    # docs/observability.md.
+    obs: ObsConfig | None = None
 
     def __post_init__(self):
+        if self.obs is not None and not isinstance(self.obs, ObsConfig):
+            if isinstance(self.obs, bool):
+                object.__setattr__(self, "obs",
+                                   ObsConfig() if self.obs else None)
+            elif isinstance(self.obs, dict):
+                object.__setattr__(self, "obs", ObsConfig(**self.obs))
+            else:
+                raise ValueError(
+                    f"obs must be an ObsConfig, bool, or dict, got "
+                    f"{self.obs!r}")
         object.__setattr__(self, "fused", _coerce(
             AttendPath, self.fused, "fused", "auto/interpret/off"))
         object.__setattr__(self, "prefill_mode", _coerce(
@@ -224,6 +244,10 @@ class Engine:
         self._faults = None
         self._finite_fn = jax.jit(cache_lib.tree_finite)
         cap = self._cap()
+        # telemetry hub (repro.obs): the scheduler discovers it via
+        # `engine.obs`; None when the knob is off (zero hot-path work)
+        self.obs = (Observability(ecfg.obs, clock=clock)
+                    if ecfg.obs is not None else None)
 
         if mesh is not None:
             if self.layout is CacheLayout.PAGED:
@@ -325,6 +349,26 @@ class Engine:
                 lambda fresh, payloads: pc_store.splice_tree_chunks(
                     self._cache_cfgs, fresh, 0, payloads))
 
+        # online compression-fidelity probes (repro.obs.fidelity): an fp16
+        # shadow prefill of sampled prompts is the exact reference the
+        # streaming pipeline discarded; the probe reads each sampled
+        # request's batch-1 tree BEFORE the donating splice, so it can
+        # never perturb serving state (probe-parity sweep in
+        # tests/test_cache.py).  GEAR engines on text models only — other
+        # modalities/policies have nothing to compare.
+        if (self.obs is not None and ecfg.obs.fidelity_every_n > 0
+                and not ecfg.policy.is_fp16 and self.cfg.modality == "text"):
+            ref_jit = jax.jit(lambda p, b: model.prefill(p, b, FP16, cap))
+            self.obs.fidelity = FidelityProbe(
+                ref_prefill=lambda b: ref_jit(self.params, b),
+                cache_cfgs=[None if kind == "rwkv"
+                            else cache_cfg_for(self.cfg, kind, ecfg.policy,
+                                               1, cap)
+                            for kind in self.cfg.layer_pattern],
+                policy=ecfg.policy, registry=self.obs.registry,
+                every_n=ecfg.obs.fidelity_every_n,
+                budget_frac=ecfg.obs.fidelity_budget_frac)
+
     # -- paged-layout setup --------------------------------------------
     def _init_paged(self, cap: int) -> None:
         ecfg = self.ecfg
@@ -419,6 +463,8 @@ class Engine:
         self._faults = injector
         if self.pool is not None:
             self.pool.faults = injector
+        if injector is not None:
+            injector.obs = self.obs
 
     def _guard_one(self, one):
         """Numeric quarantine boundary for one request's batch-1 cache tree.
@@ -433,10 +479,45 @@ class Engine:
         if self._faults is not None:
             one = self._faults.corrupt_tree(one)
         if self.ecfg.numeric_guard and not bool(self._finite_fn(one)):
+            if self.obs is not None:
+                self.obs.quarantine()
+                self.obs.tracer.event_bound("quarantine")
             raise cache_lib.NumericFault(
                 "prefill produced NaN/Inf in a compressed chunk; "
                 "quarantining this request (shared cache state untouched)")
         return one
+
+    # -- observability hooks -------------------------------------------
+    @property
+    def _prof(self) -> bool:
+        return self.obs is not None and self.obs.cfg.profiler
+
+    def _span(self, name: str):
+        """Trace span on the scheduler-bound rid; no-op without obs."""
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.tracer.span_bound(name)
+
+    def _obs_prefill(self, batch1, logits, one, n_hit: int = 0,
+                     pages_reserved: int | None = None) -> None:
+        """Per-prefill telemetry, called with the guarded batch-1 tree
+        BEFORE the donating splice: annotates the scheduler's open prefill
+        span (prefix hit / bucket / pages), feeds the bucket histogram,
+        and hands the read-only tree to the fidelity probe."""
+        o = self.obs
+        if o is None:
+            return
+        plen = int(np.asarray(batch1["tokens"]).shape[-1])
+        nb = self.ecfg.policy.buffer_size
+        bucket = (plen + nb - 1) // nb * nb if self._can_bucket else plen
+        o.observe_bucket(bucket)
+        ann = {"prompt_tokens": plen, "bucket_tokens": bucket,
+               "prefix_hit_chunks": n_hit}
+        if pages_reserved is not None:
+            ann["pages_reserved"] = pages_reserved
+        o.tracer.annotate(**ann)
+        if o.fidelity is not None:
+            o.fidelity.maybe_probe(batch1, logits, one)
 
     def audit(self) -> dict:
         """Cross-structure invariant audit: page pool refcounts against
@@ -499,20 +580,22 @@ class Engine:
         """
         n = batch1["tokens"].shape[1]
         nb = self.ecfg.policy.buffer_size
-        if not self._can_bucket or n % nb == 0:
-            return self._prefill(self.params, batch1)
-        n_bucket = (n + nb - 1) // nb * nb
-        toks = jnp.asarray(batch1["tokens"], jnp.int32)
-        padded = {"tokens": jnp.pad(toks, ((0, 0), (0, n_bucket - n)))}
-        return self._prefill_bucketed(self.params, padded, jnp.int32(n))
+        with profiler_span("gear.prefill", self._prof):
+            if not self._can_bucket or n % nb == 0:
+                return self._prefill(self.params, batch1)
+            n_bucket = (n + nb - 1) // nb * nb
+            toks = jnp.asarray(batch1["tokens"], jnp.int32)
+            padded = {"tokens": jnp.pad(toks, ((0, 0), (0, n_bucket - n)))}
+            return self._prefill_bucketed(self.params, padded, jnp.int32(n))
 
     def decode(self, token_batch: dict, caches, pos):
         """One decode step.  ``pos``: scalar or per-slot [B] int32 vector."""
-        if self.layout is CacheLayout.PAGED:
+        with profiler_span("gear.decode", self._prof):
+            if self.layout is CacheLayout.PAGED:
+                return self._decode(self.params, token_batch, caches,
+                                    jnp.asarray(pos, jnp.int32), self._bt)
             return self._decode(self.params, token_batch, caches,
-                                jnp.asarray(pos, jnp.int32), self._bt)
-        return self._decode(self.params, token_batch, caches,
-                            jnp.asarray(pos, jnp.int32))
+                                jnp.asarray(pos, jnp.int32))
 
     # -- slot-level continuous batching --------------------------------
     def prefill_slot(self, batch1: dict, caches, slot: int, admit: bool = True,
@@ -564,8 +647,10 @@ class Engine:
         if self.prefix_cache is None:
             logits, one = self._cold_prefill(batch1)
             one = self._guard_one(one)
-            return logits, self._splice_donate_one(caches, one,
-                                                   jnp.asarray(slot, jnp.int32))
+            self._obs_prefill(batch1, logits, one)
+            with self._span("splice"):
+                return logits, self._splice_donate_one(
+                    caches, one, jnp.asarray(slot, jnp.int32))
         tokens = np.asarray(batch1["tokens"][0])
         nb = self.ecfg.policy.buffer_size
         n = tokens.shape[0]
@@ -581,13 +666,15 @@ class Engine:
             else:
                 logits, one = self._cold_prefill(batch1)
             one = self._guard_one(one)
+            self._obs_prefill(batch1, logits, one, n_hit=n_hit)
             if admit and n // nb > n_hit:
                 payloads = self._extract_fn(n_hit, n // nb)(one)
                 self.prefix_cache.insert(tokens, payloads, start_chunk=n_hit)
         finally:
             self.prefix_cache.release(match)
-        return logits, self._splice_donate_one(caches, one,
-                                               jnp.asarray(slot, jnp.int32))
+        with self._span("splice"):
+            return logits, self._splice_donate_one(
+                caches, one, jnp.asarray(slot, jnp.int32))
 
     def _prefill_suffix(self, tokens: np.ndarray, n_hit: int, one1):
         """Run the (possibly bucketed) suffix after an ``n_hit``-chunk trie
@@ -595,14 +682,15 @@ class Engine:
         nb = self.ecfg.policy.buffer_size
         suf = np.asarray(tokens[n_hit * nb:], np.int32)
         n_suf = suf.shape[0]
-        if n_suf % nb == 0:
-            suffix = {"tokens": jnp.asarray(suf[None], jnp.int32)}
-            return self._suffix_fn(n_hit)(self.params, suffix, one1)
-        n_bucket = (n_suf + nb - 1) // nb * nb
-        padded = {"tokens": jnp.pad(jnp.asarray(suf[None], jnp.int32),
-                                    ((0, 0), (0, n_bucket - n_suf)))}
-        return self._suffix_fn(n_hit, padded_tail=True)(
-            self.params, padded, one1, jnp.int32(n_suf))
+        with profiler_span("gear.prefill_suffix", self._prof):
+            if n_suf % nb == 0:
+                suffix = {"tokens": jnp.asarray(suf[None], jnp.int32)}
+                return self._suffix_fn(n_hit)(self.params, suffix, one1)
+            n_bucket = (n_suf + nb - 1) // nb * nb
+            padded = {"tokens": jnp.pad(jnp.asarray(suf[None], jnp.int32),
+                                        ((0, 0), (0, n_bucket - n_suf)))}
+            return self._suffix_fn(n_hit, padded_tail=True)(
+                self.params, padded, one1, jnp.int32(n_suf))
 
     def _prefill_slot_paged(self, batch1, caches, slot, admit, reserve_tokens):
         nb = self.ecfg.policy.buffer_size
@@ -641,12 +729,15 @@ class Engine:
                 self.pool.release_slot(slot)
                 self._bt = jnp.asarray(self.pool.block_tables)
                 raise
+            self._obs_prefill(batch1, logits, one, n_hit=n_hit,
+                              pages_reserved=n_total)
             n_sc = n_closed - n_hit
-            caches = self._paged_splice_fn(n_hit)(
-                caches, one,
-                jnp.asarray(fresh[n_sc:], jnp.int32),   # reserved: zero
-                jnp.asarray(fresh[:n_sc], jnp.int32),   # closed: scatter
-                jnp.asarray(slot, jnp.int32))
+            with self._span("splice"):
+                caches = self._paged_splice_fn(n_hit)(
+                    caches, one,
+                    jnp.asarray(fresh[n_sc:], jnp.int32),   # reserved: zero
+                    jnp.asarray(fresh[:n_sc], jnp.int32),   # closed: scatter
+                    jnp.asarray(slot, jnp.int32))
             self._bt = jnp.asarray(self.pool.block_tables)
             if self.prefix_cache is not None and admit and n_closed > n_hit:
                 row = self.pool.block_tables[slot]

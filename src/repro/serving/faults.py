@@ -145,6 +145,10 @@ class FaultInjector:
         self.visits = {s: 0 for s in FAULT_SITES}
         self.fired = {s: 0 for s in FAULT_SITES}
         self.log: list[tuple[str, int]] = []
+        # telemetry sink: Engine.attach_faults points this at its
+        # Observability so firings become counter increments and trace
+        # events; None keeps the injector dependency-free
+        self.obs = None
 
     def fire(self, site: str) -> bool:
         """One visit to ``site``; True when a fault should fire now."""
@@ -158,6 +162,8 @@ class FaultInjector:
         if hit:
             self.fired[site] += 1
             self.log.append((site, i))
+            if self.obs is not None:
+                self.obs.fault_fired(site, i)
         return hit
 
     # -- site hooks ---------------------------------------------------------

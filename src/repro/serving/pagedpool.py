@@ -29,11 +29,41 @@ bit-identity guarantee.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
 
-__all__ = ["PagePool", "PagePoolStore", "PoolExhausted", "pages_needed"]
+__all__ = ["PagePool", "PagePoolStore", "PoolExhausted", "PoolSnapshot",
+           "pages_needed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSnapshot:
+    """Typed point-in-time view of a :class:`PagePool` — the ``"pool"``
+    entry in ``Scheduler.last_stats``.  Indexing (``snap["admits"]``)
+    delegates to attributes so legacy dict-style consumers keep working.
+    """
+
+    admits: int
+    rejects: int
+    shared_pages: int
+    fresh_pages: int
+    freed_pages: int
+    page_bytes: int
+    free_pages: int
+    used_pages: int
+    total_bytes: int
+    used_bytes: int
+
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 def pages_needed(n_tokens: int, chunk: int) -> int:
@@ -112,6 +142,17 @@ class PagePool:
         """True when a reservation of ``n_total`` pages (``n_shared`` of
         them prefix-cache hits needing no allocation) would succeed."""
         return (n_total - n_shared) <= len(self._free) and n_total <= self.n_chunks
+
+    def snapshot(self) -> PoolSnapshot:
+        """Typed snapshot of lifetime counters + current occupancy."""
+        return PoolSnapshot(
+            admits=self.stats["admits"], rejects=self.stats["rejects"],
+            shared_pages=self.stats["shared_pages"],
+            fresh_pages=self.stats["fresh_pages"],
+            freed_pages=self.stats["freed_pages"],
+            page_bytes=self.page_bytes, free_pages=self.free_pages,
+            used_pages=self.used_pages, total_bytes=self.total_bytes,
+            used_bytes=self.used_bytes)
 
     # -- slot lifecycle ----------------------------------------------------
     def admit(self, slot: int, n_total: int,

@@ -142,6 +142,12 @@ class Scheduler:
         self._clock = time.monotonic if clock is None else clock
         self._sleep = (sleep if sleep is not None
                        else getattr(clock, "sleep", time.sleep))
+        # telemetry hub (repro.obs), engine-owned; the tracer follows the
+        # scheduler's clock so spans line up with deadlines/backoff (and
+        # stay deterministic under a FakeClock)
+        self.obs = getattr(engine, "obs", None)
+        if self.obs is not None:
+            self.obs.tracer.clock = self._clock
         self.queue: deque[Request] = deque()
         self.last_stats: dict = {}
         self.submitted_rids: list[int] = []
@@ -186,6 +192,7 @@ class Scheduler:
                     "block-table entries)")
         self.submitted_rids.append(req.rid)
         self._submit_t[req.rid] = self._clock()
+        o = self.obs
         if self.valve.shed(len(self.queue)):
             # load shedding: an immediate terminal result (delivered with
             # the next run) beats queueing behind work that cannot finish
@@ -193,8 +200,14 @@ class Scheduler:
                 rid=req.rid, tokens=_EMPTY, prefill_s=0.0, decode_s=0.0,
                 status=RequestStatus.REJECTED, attempts=0,
                 error=f"shed at submit: queue at max_queue={self.valve.max_queue}"))
+            if o is not None:
+                o.on_shed(req.rid)
+                o.result(str(RequestStatus.REJECTED))
             return
         self.queue.append(req)
+        if o is not None:
+            o.on_submit(req.rid)
+            o.queue_depth(len(self.queue))
 
     def _drain_shed(self) -> list[Result]:
         out, self._shed = self._shed, []
@@ -244,11 +257,15 @@ class Scheduler:
             for i, r in enumerate(wave):
                 if r.rid < 0:
                     continue
-                results.append(Result(
+                res = Result(
                     rid=r.rid,
                     tokens=_truncate_eos(toks[i, : r.max_new_tokens], eos),
                     prefill_s=stats["prefill_s"],
-                    decode_s=stats["decode_s"]))
+                    decode_s=stats["decode_s"])
+                results.append(res)
+                if self.obs is not None:
+                    self.obs.result(str(res.status))
+                    self.obs.tracer.finish(r.rid, str(res.status))
         self.last_stats = {"wall_s": time.time() - t_all,
                            "tokens": int(sum(len(r.tokens) for r in results)),
                            "statuses": dict(Counter(str(r.status)
@@ -289,7 +306,9 @@ class Scheduler:
         # engine prefix-cache counters are lifetime-cumulative; snapshot so
         # last_stats reports THIS run's rates, like every other field in it
         # (a paged engine's new_view re-keys the trie, so snapshot AFTER)
-        pstats0 = eng.prefix_cache.stats if eng.prefix_cache is not None else None
+        pstats0 = (eng.prefix_cache.snapshot()
+                   if eng.prefix_cache is not None else None)
+        obs = self.obs
         pos = np.zeros(B, np.int32)        # per-slot absolute decode position
         budget = np.zeros(B, np.int32)     # per-slot remaining-token budget
         done = np.ones(B, bool)            # per-slot idle flag
@@ -321,6 +340,11 @@ class Scheduler:
                 rid=r.rid, tokens=np.asarray(tokens, np.int32),
                 prefill_s=0.0, decode_s=0.0, status=status,
                 attempts=attempts.get(r.rid, 0), error=error))
+            if obs is not None:
+                obs.result(str(status))
+                if error:
+                    obs.tracer.event(r.rid, "terminal", error=error)
+                obs.tracer.finish(r.rid, str(status))
 
         def reap_expired_queue() -> None:
             """Queued requests past their deadline: empty TIMEOUT results."""
@@ -347,6 +371,13 @@ class Scheduler:
                 decode_s=float(decode_s[s]),
                 status=status, attempts=attempts.get(r.rid, 0) + 1,
                 error=error))
+            if obs is not None:
+                obs.result(str(status))
+                obs.tracer.add_span(r.rid, "decode", float(decode_s[s]),
+                                    steps=len(toks_buf[s]))
+                if error:
+                    obs.tracer.event(r.rid, "terminal", error=error)
+                obs.tracer.finish(r.rid, str(status))
             reqs[s] = None
             done[s] = True
             cur[s] = 0
@@ -358,6 +389,10 @@ class Scheduler:
             False when it went back to the queue head to retry later."""
             nonlocal not_before
             attempts[r.rid] = attempts.get(r.rid, 0) + 1
+            if obs is not None:
+                obs.retry("admission")
+                obs.tracer.event(r.rid, "retry", kind="admission",
+                                 attempt=attempts[r.rid], error=str(exc))
             if attempts[r.rid] >= self.retry.max_attempts:
                 terminal(r, status,
                          f"admission failed {attempts[r.rid]}x: {exc}")
@@ -377,6 +412,16 @@ class Scheduler:
                          f"deadline {r.deadline_s}s elapsed while queued")
                 return True
             prompt = np.asarray(r.tokens, np.int32)[None]   # raw, unpadded
+            if obs is not None:
+                tr = obs.tracer.active.get(r.rid)
+                if tr is not None:
+                    obs.observe_queue_wait(
+                        max(self._clock() - tr.t_submit, 0.0))
+                obs.tracer.end(r.rid)   # close "queued"
+                obs.tracer.attempt(r.rid)
+                obs.tracer.begin(r.rid, "prefill",
+                                 attempt=attempts.get(r.rid, 0) + 1, slot=s)
+                obs.tracer.bind(r.rid)
             t0 = time.time()
             try:
                 if self._faults is not None:
@@ -403,9 +448,15 @@ class Scheduler:
                 # bounded retry (it completes DEGRADED), then FAILED
                 degraded.add(r.rid)
                 return admit_failed(r, e, RequestStatus.FAILED)
+            finally:
+                if obs is not None:
+                    obs.tracer.unbind()
+                    obs.tracer.end(r.rid)   # close "prefill"
             first = int(np.asarray(
                 sample(logits[:, -1], key, eng.ecfg.temperature, eng.ecfg.top_k))[0])
             prefill_s[s] = time.time() - t0
+            if obs is not None:
+                obs.observe_prefill(float(prefill_s[s]))
             fresh[s] = False
             reqs[s] = r
             toks_buf[s] = [first]
@@ -475,6 +526,12 @@ class Scheduler:
                     # donated cache tree is untouched — retry is safe
                     dec_faults += 1
                     active = list(np.nonzero(~done)[0])
+                    if obs is not None:
+                        obs.retry("decode")
+                        for s in active:
+                            obs.tracer.event(reqs[s].rid, "retry",
+                                             kind="decode",
+                                             attempt=dec_faults)
                     if dec_faults >= self.retry.max_attempts:
                         for s in active:
                             finish(s, status=RequestStatus.FAILED,
@@ -495,8 +552,14 @@ class Scheduler:
             t_decode_total += step_t
             steps += 1
             pos += 1  # idle slots advance harmlessly; a splice rewrites pos[s]
-            for s in np.nonzero(~done)[0]:
+            active_slots = np.nonzero(~done)[0]
+            if obs is not None:
+                obs.decode_step(step_t, len(active_slots))
+                obs.queue_depth(len(self.queue))
+            for s in active_slots:
                 decode_s[s] += step_t
+                if obs is not None:
+                    obs.tracer.step(reqs[s].rid)
                 tok = int(nxt[s])
                 toks_buf[s].append(tok)
                 cur[s] = tok
@@ -517,25 +580,31 @@ class Scheduler:
             "statuses": dict(Counter(str(r.status) for r in results)),
         }
         if eng.pool is not None:
-            self.last_stats["pool"] = {
-                **eng.pool.stats,
-                "page_bytes": eng.pool.page_bytes,
-                "free_pages": eng.pool.free_pages,
-                "used_pages": eng.pool.used_pages,
-            }
+            # typed snapshot; PoolSnapshot indexes like the old dict entry
+            self.last_stats["pool"] = eng.pool.snapshot()
         if pstats0 is not None:
-            pstats = eng.prefix_cache.stats
-            hit = pstats["hit_chunks"] - pstats0["hit_chunks"]
-            look = pstats["lookup_chunks"] - pstats0["lookup_chunks"]
+            pstats = eng.prefix_cache.snapshot()
+            hit = pstats.hit_chunks - pstats0.hit_chunks
+            look = pstats.lookup_chunks - pstats0.lookup_chunks
             self.last_stats["prefix_hit_rate"] = hit / max(look, 1)
             self.last_stats["prefill_toks_saved"] = (
-                pstats["prefill_toks_saved"] - pstats0["prefill_toks_saved"])
+                pstats.prefill_toks_saved - pstats0.prefill_toks_saved)
             self.last_stats["prefix_evictions"] = (
-                pstats["evictions"] - pstats0["evictions"])
+                pstats.evictions - pstats0.evictions)
             self.last_stats["prefix_expiries"] = (
-                pstats["expiries"] - pstats0["expiries"])
+                pstats.expiries - pstats0.expiries)
             self.last_stats["prefix_version_evictions"] = (
-                pstats["version_evictions"] - pstats0["version_evictions"])
+                pstats.version_evictions - pstats0.version_evictions)
+            self.last_stats["prefix"] = pstats
+        if obs is not None:
+            # fold lifetime component counters into the registry (delta
+            # semantics with reset detection — a paged new_view rebuilds
+            # the pool/trie and zeroes their cumulative stats)
+            if eng.pool is not None:
+                obs.sync_pool(self.last_stats["pool"])
+            if eng.prefix_cache is not None:
+                obs.sync_prefix(eng.prefix_cache.snapshot())
+            obs.queue_depth(len(self.queue))
         return results
 
 

@@ -327,3 +327,48 @@ def test_streaming_prefill_rejects_unsupported_layouts():
         with pytest.raises(ValueError, match="per-channel K"):
             streaming_prefill_layer_cache(cfg, init_layer_cache(cfg), q, k, v,
                                           DH**-0.5)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 satellite: fidelity probes are strictly read-only — an engine
+# with probes armed produces bit-identical logits AND cache trees to an
+# engine with observability off, across prompt lengths that do and do not
+# close chunks (the probe only fires on closed chunks).
+
+
+@pytest.mark.obs
+@pytest.mark.slow
+def test_fidelity_probe_never_perturbs_serving_state():
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.models.model import build_model
+    from repro.serving import Engine, EngineConfig, ObsConfig
+
+    cfg = ModelConfig(name="tiny-probe", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                      d_ff=64, vocab_size=64)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    pol = dataclasses.replace(named_policy("gear_kcvt4"), buffer_size=8,
+                              group=8, rank=2, rank_decode=2)
+    base = EngineConfig(batch=1, capacity=48, policy=pol)
+    eng_off = Engine(m, params, base)
+    eng_on = Engine(m, params, dataclasses.replace(
+        base, obs=ObsConfig(fidelity_every_n=1)))
+
+    rng = np.random.RandomState(0)
+    # 5 tokens: zero closed chunks (probe idle); 19/27: 2-3 closed chunks
+    for plen in (5, 19, 27):
+        prompt = {"tokens": jnp.asarray(rng.randint(4, 64, size=(1, plen)),
+                                        jnp.int32)}
+        log_off, cache_off = eng_off.prefill_slot(prompt,
+                                                  eng_off.init_caches(), 0)
+        log_on, cache_on = eng_on.prefill_slot(prompt,
+                                               eng_on.init_caches(), 0)
+        np.testing.assert_array_equal(np.asarray(log_off), np.asarray(log_on))
+        for a, b in zip(jax.tree_util.tree_leaves(cache_off),
+                        jax.tree_util.tree_leaves(cache_on)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the probe genuinely ran on the chunk-closing prompts
+    assert eng_on.obs.fidelity.reports
+    assert {rp["prompt_tokens"] for rp in eng_on.obs.fidelity.reports} <= {19, 27}

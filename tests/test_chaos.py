@@ -398,3 +398,43 @@ def test_fault_injector_is_deterministic():
         assert a.fire("nan_chunk") == b.fire("nan_chunk")
     assert a.log == b.log
     assert a.fired["nan_chunk"] >= 1     # the scheduled event fired
+
+
+# ---------------------------------------------------------------------------
+# Telemetry under chaos (ISSUE 10 satellite): fault schedules may retry,
+# reject, quarantine, or fail requests — the tracer must still finish
+# exactly ONE trace per submitted rid, with statuses matching the results
+
+
+@pytest.mark.obs
+@pytest.mark.parametrize("rates", [
+    {"pool_exhausted": 0.3, "nan_chunk": 0.2},
+    {"prefill_error": 0.3, "decode_error": 0.15},
+    {"pool_exhausted": 0.2, "nan_chunk": 0.1, "decode_error": 0.1,
+     "clock_skew": 0.05},
+])
+def test_obs_one_trace_per_rid_under_chaos(rates):
+    from repro.serving import ObsConfig
+    eng = _engine("paged_obs", obs=ObsConfig())
+    clk = FakeClock()
+    inj = FaultInjector(seed=11, rates=rates, clock=clk)
+    eng.obs.tracer.reset()              # engines are shared across params
+
+    def by_status():
+        return {s["labels"]["status"]: s["value"] for s in
+                eng.obs.registry.get("serving_results_total").series()}
+
+    before = by_status()                # counters are engine-lifetime
+    sched, results = _drive(eng, faults=inj, clock=clk,
+                            retry=RetryPolicy(max_attempts=2, backoff_s=0.1))
+    rids = [r.rid for r in _requests()]
+    cov = eng.obs.tracer.coverage(rids)
+    assert cov["complete"], cov
+    assert cov["statuses"] == {r.rid: str(r.status) for r in results}
+    # registry result totals stay in lockstep with the typed results even
+    # when terminal paths differ (shed / rejected / failed / ok)
+    after = by_status()
+    delta = {k: after[k] - before.get(k, 0.0) for k in after
+             if after[k] != before.get(k, 0.0)}
+    assert delta == {k: float(v) for k, v in sched.last_stats["statuses"].items()}
+    assert sched.audit(results)["ok"]
